@@ -1,0 +1,30 @@
+"""Fig 11 analogue: arithmetic intensity vs fusion degree.
+
+Reports the paper's AI formula, the streaming model, and the machine
+balance of each target — showing where choose_f lands per platform.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.fusion import ai_paper, ai_stream, choose_f
+from repro.core.target import (ARM_A64FX, ARM_GRACE, ARM_GRAVITON3,
+                               TPU_V5E, TPU_V5P)
+
+
+def run():
+    for f in range(1, 8):
+        emit(f"fig11/ai/f{f}", 0.0,
+             f"ai_paper_nv4={ai_paper(f, 4):.2f},"
+             f"ai_stream={ai_stream(f):.1f}")
+    for t in (ARM_GRACE, ARM_GRAVITON3, ARM_A64FX, TPU_V5E, TPU_V5P):
+        emit(f"fig11/balance/{t.name}", 0.0,
+             f"machine_balance={t.machine_balance_f32:.1f},"
+             f"chosen_f={choose_f(t)}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Fig 13 analogue: strong scaling of the distributed simulator.
+
+The container's fake devices share one CPU core, so wall time cannot show
+parallel speedup; what scales (and is reported) is the structure: state
+bytes per device halve with each doubling while the collective volume per
+device stays bounded — the same property that gave the paper near-linear
+scaling to 288 threads.  Runs in subprocesses (device count is fixed at
+jax init).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _probe(devices: int, n: int) -> dict:
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={devices}"
+        import sys, json; sys.path.insert(0, {_SRC!r})
+        import jax
+        from repro.core import circuits as C
+        from repro.core.distributed import DistributedSimulator
+        from repro.core.target import CPU_TEST
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh(({devices},), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        circ = C.qrc({n}, depth=4)
+        ds = DistributedSimulator({n}, mesh, CPU_TEST, f=3)
+        fn, planes, sc, _ = ds.build_step(circ)
+        lowered = fn.lower(ds.global_state_shape(),
+                           *[jax.ShapeDtypeStruct(p.shape, p.dtype)
+                             for p in planes])
+        co = lowered.compile()
+        hlo = analyze_hlo(co.as_text())
+        mem = co.memory_analysis()
+        print(json.dumps({{
+            "devices": {devices},
+            "swaps": sc["swaps"],
+            "flops_per_dev": hlo.flops,
+            "coll_bytes_per_dev": hlo.collective_bytes,
+            "state_bytes_per_dev": mem.argument_size_in_bytes,
+        }}))
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=480)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(n: int = 14):
+    base = None
+    for d in (1, 2, 4, 8):
+        r = _probe(d, n)
+        if base is None:
+            base = r
+        emit(f"fig13/qrc{n}/dev{d}", 0.0,
+             f"flops_per_dev={r['flops_per_dev']:.3g},"
+             f"state_bytes_per_dev={r['state_bytes_per_dev']},"
+             f"swaps={r['swaps']},"
+             f"coll_bytes_per_dev={r['coll_bytes_per_dev']:.3g},"
+             f"parallel_eff={base['flops_per_dev']/(r['flops_per_dev']*d):.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

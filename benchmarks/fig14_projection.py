@@ -1,0 +1,47 @@
+"""Fig 14/15 analogue: cross-platform roofline projection.
+
+The paper compares SVE CPUs against an H100 and against 2-3x more
+non-SVE CPU cores at equal runtime.  Without those machines, we project
+per-circuit runtimes from the roofline model (structural flops/bytes of
+the fused circuit) for each hardware descriptor and report the crossover
+behaviour the paper observed (small circuits favour the CPU/SVE side;
+capacity favours CPUs: 36 qubits does not fit an 80 GB GPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core import circuits as C
+from repro.core import metrics as MET
+from repro.core.fusion import choose_f, fuse_circuit
+from repro.core.target import (ARM_A64FX, ARM_GRACE, TPU_V5E, Target)
+
+H100 = Target("h100", 128, 8, 50 * 2**20, 3350e9, 67e12, 989e12, 0,
+              900e9)
+
+
+def run():
+    targets = (ARM_GRACE, ARM_A64FX, TPU_V5E, H100)
+    for n in (16, 22, 28, 34):
+        circ = C.build("grover", min(n, 20))  # structure only; scale flops
+        scale = 2.0 ** (n - min(n, 20))
+        for t in targets:
+            f = choose_f(t)
+            fused = fuse_circuit(circ.gates, f)
+            cost = MET.circuit_cost(fused, min(n, 20), t)
+            r = MET.roofline_time(cost.flops * scale,
+                                  cost.hbm_bytes * scale, t)
+            state_gb = 2 ** n * 8 / 1e9
+            fits = (state_gb < 80 if t.name == "h100" else state_gb < 480)
+            emit(f"fig14/grover{n}/{t.name}", r["time_s"],
+                 f"bound={r['bound']},f={f},state_gb={state_gb:.1f},"
+                 f"fits={'yes' if fits else 'NO'}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

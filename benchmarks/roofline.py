@@ -1,0 +1,190 @@
+"""Roofline analysis of the dry-run results (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derives the three roofline terms from the
+compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+  memory term     = HLO/analytic bytes / HBM_bw        (per chip)
+  collective term = collective_bytes / link_bw         (per chip)
+
+HLO_FLOPs and collective_bytes come from the scan-corrected HLO parser
+(repro.launch.hlo_analysis) — SPMD-partitioned HLO shapes are per-device,
+so no further division by chip count is needed.  The memory term uses an
+analytic traffic model (documented below) because XLA:CPU's
+``bytes accessed`` both undercounts scanned layers and overcounts bf16
+buffers that its legalization pass duplicates in f32 (DESIGN.md §8).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.jsonl")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N=active params, D=tokens);
+    2*N*D for one decode/prefill forward."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch   # decode: 1 token/seq
+
+
+def analytic_memory_bytes(arch: str, shape_name: str, devices: int) -> float:
+    """Per-chip HBM traffic per step (analytic, documented):
+
+    train:   params read twice (fwd+bwd) + grad write + optimizer
+             read/write (2 moments fp32 r/w + param update r/w, ZeRO-1
+             sharded over data) + activation save/reload (bf16, one (B,S,d)
+             residual per layer, x2 for write+read) + logits r/w.
+    prefill: params once + activations write + KV cache write.
+    decode:  params once + full KV cache / SSM state read + write of one
+             position.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = 16
+    dp = devices // tp
+    n_params = cfg.param_count()
+    p_shard = n_params / devices * 4           # fp32 params, fully sharded
+    # params are sharded over model only (replicated across data):
+    p_model_shard = n_params / tp * 4
+    b_loc = max(shape.global_batch // dp, 1)
+    d = cfg.d_model
+    s = shape.seq_len
+    act = b_loc * s * d * 2                     # one bf16 (B,S,d) per layer
+    logits = b_loc * s * cfg.padded_vocab / tp * 4
+
+    if shape.kind == "train":
+        param_traffic = 2 * p_model_shard + p_model_shard  # fwd+bwd read, grad
+        opt_traffic = (4 * 2 + 2 * 2) * n_params / devices * 4 / 4
+        # mu/nu read+write fp32 + param read/write: ZeRO-1 => /devices
+        opt_traffic = 6 * n_params / devices * 4
+        act_traffic = 3 * cfg.num_layers * act  # save + bwd reload + remat
+        return param_traffic + opt_traffic + act_traffic + 2 * logits
+    if shape.kind == "prefill":
+        kv = (cfg.num_layers * b_loc * s * cfg.num_kv_heads * cfg.hd * 2
+              * 2 / max(tp // 4, 1)) if cfg.family not in ("ssm",) else 0
+        return p_model_shard + cfg.num_layers * act + logits + kv
+    # decode
+    if cfg.family == "ssm":
+        state = (cfg.num_layers * b_loc * (cfg.d_inner // cfg.ssm_head_dim)
+                 * cfg.ssm_head_dim ** 2 * 4)
+        return p_model_shard + 2 * state
+    kv_heads_shard = max(cfg.num_kv_heads // tp, 1)
+    kv = cfg.num_layers * b_loc * s * kv_heads_shard * cfg.hd * 2 * 2
+    if cfg.family == "hybrid":
+        g = cfg.num_layers // cfg.attn_every
+        kv = g * b_loc * s * kv_heads_shard * cfg.hd * 2 * 2
+        kv += cfg.num_layers * b_loc * cfg.ssm_heads * cfg.ssm_state \
+            * cfg.ssm_head_dim * 4 * 2
+    return p_model_shard + kv
+
+
+def analyze(rows: list[dict]) -> list[dict]:
+    out = []
+    for r in rows:
+        if r.get("kind") == "quantum":
+            # quantum cells: state streamed once per fused gate (re+im fp32)
+            devices = r["devices"]
+            n_qubits = int("".join(c for c in r["arch"] if c.isdigit()))
+            state_dev = 2 * (2 ** n_qubits) * 4 / devices
+            mem_dev = 2 * state_dev * r["fused_gates"]
+            t_c = r["hlo"]["flops"] / PEAK_FLOPS
+            t_m = mem_dev / HBM_BW
+            t_x = r["hlo"]["collective_bytes"] / ICI_BW
+            terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+            dom = max(terms, key=terms.get)
+            out.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "strategy": "vla", "devices": devices,
+                "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+                "bound": dom, "model_flops": 0.0,
+                "hlo_flops_total": r["hlo"]["flops"] * devices,
+                "useful_ratio": 1.0,
+                "step_s": max(terms.values()),
+                "roofline_frac": min(1.0, max(t_c, t_m)
+                                     / max(terms.values())),
+                "peak_bytes_dev": r["memory"]["peak_per_device_bytes"],
+            })
+            continue
+        devices = r["devices"]
+        flops_dev = r["hlo"]["flops"]
+        coll_dev = r["hlo"]["collective_bytes"]
+        mem_dev = analytic_memory_bytes(r["arch"], r["shape"], devices)
+        t_c = flops_dev / PEAK_FLOPS
+        t_m = mem_dev / HBM_BW
+        t_x = coll_dev / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        useful = mf / max(flops_dev * devices, 1.0)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "strategy": r.get("strategy", "tp"),
+            "devices": devices,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bound": dom,
+            "model_flops": mf,
+            "hlo_flops_total": flops_dev * devices,
+            "useful_ratio": useful,
+            "step_s": max(terms.values()),
+            "roofline_frac": min(1.0, t_c / max(terms.values())),
+            "peak_bytes_dev": r["memory"]["peak_per_device_bytes"],
+        })
+    return out
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    rows = {}
+    with open(path) as fh:
+        for line in fh:
+            r = json.loads(line)
+            r["arch"] = r["arch"].replace("-", "_")   # normalize CLI aliases
+            k = (r["arch"], r["shape"], r["mesh"],
+                 r.get("strategy", "tp"), r.get("fused_gates"))
+            rows[k] = r          # last occurrence wins (re-runs supersede)
+    return list(rows.values())
+
+
+def run(path: str = RESULTS):
+    rows = analyze(load(path))
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"],
+                             r["strategy"]))
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+              f"/{r['strategy']},"
+              f"{r['step_s'] * 1e6:.1f},"
+              f"bound={r['bound']},compute_s={r['compute_s']:.2e},"
+              f"memory_s={r['memory_s']:.2e},"
+              f"collective_s={r['collective_s']:.2e},"
+              f"useful={r['useful_ratio']:.2f},"
+              f"roofline_frac={r['roofline_frac']:.2f}")
+
+
+def main():
+    if os.path.exists(RESULTS):
+        run()
+    else:
+        print(f"roofline/skipped,0.0,no {RESULTS} (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig6 tab4  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig6_overall, fig10_fusion, fig11_ai, fig12_ablation,
+                        fig13_scaling, fig14_projection, roofline,
+                        tab3_gate_ops, tab4_vectorization)
+
+MODULES = {
+    "fig6": fig6_overall,
+    "tab3": tab3_gate_ops,
+    "tab4": tab4_vectorization,
+    "fig10": fig10_fusion,
+    "fig11": fig11_ai,
+    "fig12": fig12_ablation,
+    "fig13": fig13_scaling,
+    "fig14": fig14_projection,
+    "roofline": roofline,
+}
+
+
+def main() -> int:
+    which = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in which:
+        t0 = time.time()
+        try:
+            MODULES[name].main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

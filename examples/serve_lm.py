@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests through the KV-cache decode
+path (attention family) and the O(1)-state recurrent path (xLSTM).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import model as M, transformer as T
+
+
+def serve_batch(arch: str, batch: int = 8, prompt_len: int = 12,
+                gen: int = 12):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    smax = prompt_len + gen
+    cache = T.init_cache(cfg, batch, smax)
+    if cfg.family == "audio":
+        cache["enc"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))
+    step = jax.jit(M.make_serve_step(cfg))
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    tok = prompts[:, :1]
+    generated = []
+    t0 = time.time()
+    for pos in range(smax - 1):
+        logits, cache = step(params, cache,
+                             {"token": tok,
+                              "pos": jnp.asarray(pos, jnp.int32)})
+        if pos + 1 < prompt_len:
+            tok = prompts[:, pos + 1:pos + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            generated.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen_arr = np.concatenate(generated, 1)
+    print(f"{arch:24s} batch={batch} generated {gen_arr.shape[1]} tokens/seq "
+          f"in {dt:.1f}s; sample: {gen_arr[0][:8].tolist()}")
+    assert gen_arr.min() >= 0 and gen_arr.max() < cfg.vocab_size
+
+
+def main():
+    serve_batch("granite_3_2b")     # KV-cache attention decode
+    serve_batch("xlstm_350m")       # recurrent-state decode
+    serve_batch("zamba2_7b")        # hybrid: SSM state + shared-attn cache
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the full production substrate — config system, synthetic data
+pipeline, AdamW, fault-tolerant loop with async checkpointing — at a size
+that runs on this CPU container.  On a TPU pod, swap the config for a full
+one and add --mesh (see repro.launch.train).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import for_model
+from repro.models import model as M, transformer as T
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime import resilient_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from an existing checkpoint dir")
+    args = ap.parse_args()
+    if not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    # ~100M-param granite-family config (same block structure as the
+    # assigned granite-3-2b, narrowed)
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b"),
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=4,
+        d_ff=1536, vocab_size=32768)
+    shape = ShapeConfig("train100m", args.seq, args.batch, "train")
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params ({cfg.name} family), "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+
+    import dataclasses as _dc
+    pipe = for_model(cfg, shape, seed=0)
+    # learnable stream: tokens restricted to 128 of the 32768 vocab entries,
+    # so loss must fall from ~ln(32768)=10.4 toward ln(128)=4.85
+    pipe = _dc.replace(pipe, cfg=_dc.replace(pipe.cfg, active_vocab=128))
+    opt = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(M.make_train_step(cfg, opt), donate_argnums=(0, 1))
+
+    def step_fn(state, batch):
+        p, o = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, p, o, gnorm = step(p, o, batch)
+        return (p, o), loss
+
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    t0 = time.time()
+    state, report = resilient_loop(
+        step_fn=step_fn, init_state=(params, init_opt_state(params)),
+        batch_fn=pipe.host_slice, num_steps=args.steps, ckpt=ckpt,
+        ckpt_every=50)
+    dt = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / dt
+    w = max(1, min(10, args.steps // 3))
+    first = np.mean(report.losses[:w])
+    last = np.mean(report.losses[-w:])
+    print(f"done in {dt:.0f}s ({tok_s:.0f} tok/s 1-core CPU); "
+          f"loss {first:.3f} -> {last:.3f}")
+    if args.steps >= 30:
+        assert last < first, "training did not reduce loss"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: VLA quantum state-vector simulation on TPU + multi-pod LM framework."""
+__version__ = "1.0.0"

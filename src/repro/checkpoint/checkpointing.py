@@ -1,0 +1,161 @@
+"""Sharded, asynchronous, integrity-checked checkpointing.
+
+Layout of one checkpoint directory::
+
+    step_000123/
+      MANIFEST.json     # tree structure, shapes, dtypes, per-leaf sha256
+      leaf_00000.npy    # one file per pytree leaf (np.save format)
+      ...
+      COMMITTED         # written last: a checkpoint without it is ignored
+
+Design points for 1000+-node deployments (documented here, exercised in
+tests at container scale):
+
+* **Atomic commit** — the COMMITTED marker is written after every leaf +
+  manifest lands, so a node failure mid-save can never leave a checkpoint
+  that ``latest_step`` would pick up.
+* **Async save** — ``save_async`` snapshots device arrays to host memory
+  synchronously (cheap) and writes to disk on a background thread, so the
+  training loop resumes immediately; ``wait()`` joins before the next save.
+* **Elastic restore** — ``restore`` takes the *target* sharding pytree and
+  ``jax.device_put``s each leaf, so a checkpoint written on one mesh can be
+  restored onto a different mesh/shape (elastic rescale).
+* On a real multi-host cluster each host writes only the leaves it owns
+  (addressable shards); here the single host owns everything.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_COMMITTED = "COMMITTED"
+_MANIFEST = "MANIFEST.json"
+
+
+def _leaf_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree) -> str:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree: PyTree) -> None:
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                self._write(step, host)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree: PyTree) -> str:
+        path = self._step_dir(step)
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for i, (name, leaf) in enumerate(_leaf_paths(host_tree)):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), leaf)
+            with open(os.path.join(tmp, fname), "rb") as fh:
+                digest = hashlib.sha256(fh.read()).hexdigest()
+            manifest["leaves"].append({
+                "key": name, "file": fname, "sha256": digest,
+                "shape": list(np.shape(leaf)),
+                "dtype": str(np.asarray(leaf).dtype),
+            })
+        with open(os.path.join(tmp, _MANIFEST), "w") as fh:
+            json.dump(manifest, fh)
+        with open(os.path.join(tmp, _COMMITTED), "w") as fh:
+            fh.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+        return path
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = re.match(r"step_(\d+)$", name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 _COMMITTED)):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like: PyTree,
+                shardings: PyTree | None = None) -> PyTree:
+        """Restore into the structure of ``like``; verify integrity; place
+        leaves per ``shardings`` (elastic: any target mesh works)."""
+        path = self._step_dir(step)
+        with open(os.path.join(path, _MANIFEST)) as fh:
+            manifest = json.load(fh)
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(flat_like) != len(manifest["leaves"]):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"target structure has {len(flat_like)}")
+        leaves = []
+        for rec in manifest["leaves"]:
+            fpath = os.path.join(path, rec["file"])
+            with open(fpath, "rb") as fh:
+                raw = fh.read()
+            if hashlib.sha256(raw).hexdigest() != rec["sha256"]:
+                raise IOError(f"checksum mismatch in {fpath}")
+            leaves.append(np.load(fpath))
+        if shardings is not None:
+            flat_sh = treedef.flatten_up_to(shardings)
+            leaves = [jax.device_put(l, s) if s is not None
+                      else jax.device_put(l)
+                      for l, s in zip(leaves, flat_sh)]
+        return treedef.unflatten(leaves)
+
+    # -- misc -----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:06d}")
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (self._all_steps()) )
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def _all_steps(self):
+        for name in os.listdir(self.directory):
+            m = re.match(r"step_(\d+)$", name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 _COMMITTED)):
+                yield int(m.group(1))

@@ -1,0 +1,42 @@
+"""Architecture config registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full-size ModelConfig; ``get_smoke(name)``
+a reduced same-family variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "gemma2_27b",
+    "qwen15_4b",
+    "granite_3_2b",
+    "qwen2_7b",
+    "chameleon_34b",
+    "whisper_medium",
+    "xlstm_350m",
+    "moonshot_v1_16b_a3b",
+    "granite_moe_1b_a400m",
+    "zamba2_7b",
+)
+
+# public --arch ids (dashes) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({a: a for a in ARCHS})
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def all_archs() -> tuple[str, ...]:
+    return ARCHS

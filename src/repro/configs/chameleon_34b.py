@@ -1,0 +1,17 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early fusion: VQ image tokens share the text vocabulary, so
+the backbone is a plain decoder; the VQ tokenizer frontend is a stub
+(input_specs provides token ids).  QK-norm per the paper.
+[arXiv:2405.09818; unverified]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    num_layers=48, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=22016, vocab_size=65536, qk_norm=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=3, d_model=64, num_heads=8, num_kv_heads=2,
+    d_ff=128, vocab_size=256)

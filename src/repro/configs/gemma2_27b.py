@@ -1,0 +1,18 @@
+"""gemma2-27b [dense]: 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000 — local+global alternating attention, logit softcaps.
+[arXiv:2408.00118; hf]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b", family="dense",
+    num_layers=46, d_model=4608, num_heads=32, num_kv_heads=16,
+    d_ff=36864, vocab_size=256000, head_dim=128,
+    sliding_window=4096, alt_local_global=True,
+    attn_softcap=50.0, logit_softcap=30.0,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=4, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=256, sliding_window=16)

@@ -1,0 +1,17 @@
+"""whisper-medium [audio]: 24L d_model=1024 16H d_ff=4096 vocab=51865 —
+enc-dec; the conv frontend is a STUB (input_specs provides precomputed
+frame embeddings (B, 1500, d)).  [arXiv:2212.04356; unverified]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=51865,
+    is_encoder_decoder=True, encoder_layers=24, encoder_seq=1500,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=2, encoder_layers=2, encoder_seq=32, d_model=64,
+    num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256)

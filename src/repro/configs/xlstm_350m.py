@@ -1,0 +1,16 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — sLSTM +
+mLSTM blocks (every 4th layer sLSTM, rest mLSTM; block-internal
+projections replace the FFN, hence d_ff=0).  [arXiv:2405.04517; unverified]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    ssm_expand=2, ssm_head_dim=64, slstm_every=4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=8, d_model=64, num_heads=2, num_kv_heads=2,
+    vocab_size=256, ssm_head_dim=16, slstm_every=4)

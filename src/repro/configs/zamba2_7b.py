@@ -1,0 +1,17 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + weight-shared attention
+block applied after every 9 mamba layers (81 = 9 groups x 9).
+[arXiv:2411.15242; unverified]"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, attn_every=9,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=256, ssm_state=16, ssm_head_dim=16, attn_every=2)

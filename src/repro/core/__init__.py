@@ -1,0 +1,9 @@
+"""Core: the paper's VLA quantum state-vector simulation, TPU-adapted."""
+from repro.core.target import (  # noqa: F401
+    Target, TPU_V5E, TPU_V5P, CPU_TEST, get_target,
+)
+from repro.core.statevec import State, zero_state, from_dense, random_state  # noqa: F401
+from repro.core.gates import Gate  # noqa: F401
+from repro.core.circuits import Circuit, build as build_circuit  # noqa: F401
+from repro.core.fusion import fuse_circuit, choose_f  # noqa: F401
+from repro.core.simulator import Simulator  # noqa: F401

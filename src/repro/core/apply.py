@@ -1,0 +1,118 @@
+"""Gate application.
+
+Two implementations live here:
+
+* ``apply_gate_dense`` — the *naive baseline*: operates on the dense
+  ``complex64[2**n]`` vector (XLA's complex storage is interleaved re/im,
+  which is exactly the layout the paper shows defeats auto-vectorization).
+  This is the oracle for everything else and the Fig-6 baseline.
+
+* ``apply_gate_planar`` — the VLA design in pure JAX on the lane-tiled planar
+  layout ``f32[2, R, V]``: explicit real arithmetic (4 real matmuls per
+  complex matvec, like the paper's FMA formulation), unit-stride lane loads.
+  The Pallas kernels in ``repro.kernels`` implement the same contract with
+  explicit VMEM staging; this function is their mid-level reference.
+
+Conventions: see ``repro.core.gates``.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gates import Gate
+
+
+def _apply_on_axes_complex(t: jax.Array, u: jax.Array, axes: Sequence[int]) -> jax.Array:
+    """Apply u (2^k x 2^k, complex) over tensor axes; axes[m] <-> gate bit m."""
+    k = len(axes)
+    order = [axes[m] for m in reversed(range(k))]  # axis for MSB first
+    t = jnp.moveaxis(t, order, range(k))
+    rest = t.shape[k:]
+    t = t.reshape(1 << k, -1)
+    t = u @ t
+    t = t.reshape((2,) * k + rest)
+    return jnp.moveaxis(t, range(k), order)
+
+
+def _apply_on_axes_planar(t: jax.Array, u_re: jax.Array, u_im: jax.Array,
+                          axes: Sequence[int]) -> jax.Array:
+    """Same, on a planes-first real tensor t[2, ...]; axes exclude plane axis."""
+    k = len(axes)
+    order = [axes[m] for m in reversed(range(k))]
+    t = jnp.moveaxis(t, order, range(1, k + 1))
+    rest = t.shape[k + 1:]
+    t = t.reshape(2, 1 << k, -1)
+    re, im = t[0], t[1]
+    # complex matvec as 4 real matmuls (paper's FMA formulation)
+    out_re = u_re @ re - u_im @ im
+    out_im = u_re @ im + u_im @ re
+    t = jnp.stack([out_re, out_im])
+    t = t.reshape((2,) + (2,) * k + rest)
+    return jnp.moveaxis(t, range(1, k + 1), order)
+
+
+def _subtensor_apply(t: jax.Array, n_axes: int, plane_offset: int,
+                     ctrl_axes: list[int], tgt_axes: list[int],
+                     apply_fn) -> jax.Array:
+    """Apply ``apply_fn`` on the subtensor where all control axes == 1."""
+    c = len(ctrl_axes)
+    if c == 0:
+        return apply_fn(t, tgt_axes)
+    dst = list(range(plane_offset, plane_offset + c))
+    t2 = jnp.moveaxis(t, ctrl_axes, dst)
+    idx = (slice(None),) * plane_offset + (1,) * c
+    sub = t2[idx]
+    # axis positions of targets inside the reduced tensor
+    rem = [a for a in range(plane_offset + n_axes) if a not in set(ctrl_axes)]
+    pos = {a: i for i, a in enumerate(rem)}
+    sub_axes = [pos[a] for a in tgt_axes]
+    sub = apply_fn(sub, sub_axes)
+    t2 = t2.at[idx].set(sub)
+    return jnp.moveaxis(t2, dst, ctrl_axes)
+
+
+def apply_gate_dense(psi: jax.Array, n: int, qubits: tuple[int, ...],
+                     u: jax.Array, controls: tuple[int, ...] = ()) -> jax.Array:
+    """Naive-baseline gate application on the dense complex vector."""
+    t = psi.reshape((2,) * n)
+    axis = lambda q: n - 1 - q
+    t = _subtensor_apply(
+        t, n, 0, [axis(q) for q in controls], [axis(q) for q in qubits],
+        lambda tt, ax: _apply_on_axes_complex(tt, u, ax))
+    return t.reshape(1 << n)
+
+
+def apply_gate_planar(data: jax.Array, n: int, qubits: tuple[int, ...],
+                      u_re: jax.Array, u_im: jax.Array,
+                      controls: tuple[int, ...] = ()) -> jax.Array:
+    """VLA gate application on the lane-tiled planar layout f32[2, R, V].
+
+    Row qubits and lane qubits are handled uniformly: the (R, V) trailing
+    axes are one contiguous 2**n index space, so exposing a lane qubit is an
+    in-register (sublane/lane) reshuffle after XLA fusion — the predication
+    analogue discussed in DESIGN.md §2.
+    """
+    shape = data.shape
+    t = data.reshape((2,) + (2,) * n)
+    axis = lambda q: 1 + (n - 1 - q)
+    t = _subtensor_apply(
+        t, n, 1, [axis(q) for q in controls], [axis(q) for q in qubits],
+        lambda tt, ax: _apply_on_axes_planar(tt, u_re, u_im, ax))
+    return t.reshape(shape)
+
+
+def gate_arrays(g: Gate) -> tuple[jax.Array, jax.Array]:
+    """Split a gate matrix into fp32 re/im planes (device constants)."""
+    m = np.asarray(g.matrix, np.complex64)
+    return jnp.asarray(m.real, jnp.float32), jnp.asarray(m.imag, jnp.float32)
+
+
+def split_row_lane(qubits: Sequence[int], v: int) -> tuple[list[int], list[int]]:
+    """Partition gate qubits into lane qubits (< log2 V) and row qubits."""
+    lane = [q for q in qubits if q < v]
+    row = [q for q in qubits if q >= v]
+    return lane, row

@@ -1,0 +1,190 @@
+"""Gate fusion — arithmetic-intensity adaptation (paper §IV-D).
+
+Vertical fusion multiplies adjacent gates acting on the same qubit set (always
+profitable — fewer state sweeps, same unitary size).  Horizontal fusion
+tensor-expands gates on disjoint qubits into one unitary of up to ``2**f``
+dimensions, raising arithmetic intensity at the cost of a bigger VMEM-resident
+matrix.  ``choose_f`` picks ``f`` from the target's machine balance and VMEM
+budget — the paper's "make AI close to the machine balance" rule, and the knob
+its Fig-10 sensitivity study sweeps.
+
+The AI model reproduces the paper's formula and an idealized streaming model:
+
+* ``ai_paper(f, num_vals)`` = 2(3·2^{2f} + 2^f(2^f−1)) / (numVals · 2^{f+3})
+* ``ai_stream(f)``          = 2^{f-1}  flops/byte
+  (per amplitude: 2^f complex MACs = 8·2^f real flops over 16 streamed bytes)
+
+Validation against the paper (tests/test_fusion.py): plugging the ARM
+platforms' balance points into ``choose_f`` returns f=3–4 on Grace, f=3 on
+Graviton, f=2–3 on A64FX — exactly the optima the paper measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.gates import Gate, expand_unitary
+from repro.core.target import Target
+
+
+def ai_paper(f: int, num_vals: int) -> float:
+    return 2.0 * (3 * (1 << (2 * f)) + (1 << f) * ((1 << f) - 1)) / (
+        num_vals * (1 << (f + 3)))
+
+
+def ai_stream(f: int) -> float:
+    return float(1 << (f - 1))
+
+
+def fused_flops_per_amp(f: int) -> float:
+    """Real flops per amplitude for one fused f-qubit gate application."""
+    return 8.0 * (1 << f)
+
+
+def choose_f(target: Target, max_f: int = 7, dtype_bytes: int = 4,
+             use_mxu: bool = False) -> int:
+    """Largest f whose streamed AI stays at/under machine balance and whose
+    unitary + state block fit the VMEM budget."""
+    balance = (target.machine_balance_bf16 if use_mxu
+               else target.machine_balance_f32)
+    best = 2
+    for f in range(2, max_f + 1):
+        u_bytes = 2 * dtype_bytes * (1 << f) ** 2          # re+im planes
+        blk_bytes = 2 * dtype_bytes * (1 << f) * max(target.lanes, 1) * 8
+        if u_bytes + blk_bytes > target.vmem_bytes // 4:
+            break
+        best = f
+        if ai_stream(f) >= balance:
+            break
+    return best
+
+
+@dataclasses.dataclass
+class _Cluster:
+    qubits: tuple[int, ...]            # sorted
+    members: list[Gate]
+    controls: tuple[int, ...] = ()
+
+    def matrix(self) -> np.ndarray:
+        out = np.eye(1 << len(self.qubits), dtype=np.complex64)
+        for g in self.members:
+            out = expand_unitary(g.qubits, g.matrix, self.qubits) @ out
+        return out.astype(np.complex64)
+
+
+def _normalize(g: Gate) -> Gate:
+    """Reorder targets ascending (canonical form for fusion bookkeeping)."""
+    if list(g.qubits) == sorted(g.qubits):
+        return g
+    q_sorted = tuple(sorted(g.qubits))
+    m = expand_unitary(g.qubits, g.matrix, q_sorted)
+    return Gate(q_sorted, m, controls=g.controls, name=g.name)
+
+
+def _expand_controls(g: Gate, max_expand: int) -> Gate:
+    """Absorb small control sets into an explicit unitary (enables fusion)."""
+    if not g.controls or g.k + len(g.controls) > max_expand:
+        return g
+    full = tuple(sorted(g.qubits + g.controls))
+    dim = 1 << len(full)
+    out = np.eye(dim, dtype=np.complex64)
+    pos = {q: i for i, q in enumerate(full)}
+    cmask = 0
+    for c in g.controls:
+        cmask |= 1 << pos[c]
+    tpos = [pos[q] for q in g.qubits]
+    for col in range(dim):
+        if (col & cmask) != cmask:
+            continue
+        a_in = 0
+        for bi, p in enumerate(tpos):
+            if (col >> p) & 1:
+                a_in |= 1 << bi
+        out[:, col] = 0
+        for a_out in range(1 << g.k):
+            row = col
+            for bi, p in enumerate(tpos):
+                row = (row & ~(1 << p)) | (((a_out >> bi) & 1) << p)
+            out[row, col] = g.matrix[a_out, a_in]
+    return Gate(full, out, name=f"x{g.name}")
+
+
+def fuse_circuit(gates: Sequence[Gate], f: int,
+                 expand_controls_up_to: int = 2) -> list[Gate]:
+    """Greedy vertical + horizontal fusion (Qsim-style) with degree ``f``.
+
+    Controlled gates whose total span is <= ``expand_controls_up_to`` qubits
+    are expanded into plain unitaries so they participate in fusion (CNOT/CZ/
+    CPhase); larger control sets (e.g. Grover's multi-controlled Z) stay
+    controlled and act as fusion barriers on their qubits.
+    """
+    clusters: list[_Cluster] = []
+    last_touch: dict[int, int] = {}     # qubit -> cluster index
+
+    for g0 in gates:
+        g = _expand_controls(g0, expand_controls_up_to)
+        g = _normalize(g)
+        touched = set(g.qubits) | set(g.controls)
+        dep = max((last_touch.get(q, -1) for q in touched), default=-1)
+        placed = False
+        if g.controls:
+            # controlled gate: only vertical fusion with an identical cluster
+            if (dep >= 0 and clusters[dep].controls == g.controls
+                    and clusters[dep].qubits == g.qubits
+                    and all(last_touch.get(q, -1) == dep for q in touched)):
+                clusters[dep].members.append(g)
+                placed = True
+        else:
+            # try the dependency cluster first, then the most recent cluster
+            for ci in dict.fromkeys([dep, len(clusters) - 1]):
+                if ci < 0 or ci >= len(clusters) or clusters[ci].controls:
+                    continue
+                cand = tuple(sorted(set(clusters[ci].qubits) | set(g.qubits)))
+                if len(cand) > f:
+                    continue
+                # all of g's qubits must not be touched by any later cluster
+                if any(last_touch.get(q, -1) > ci for q in touched):
+                    continue
+                # growing the cluster must not skip later clusters touching
+                # the new qubits
+                new_qs = set(cand) - set(clusters[ci].qubits)
+                if any(last_touch.get(q, -1) > ci for q in new_qs):
+                    continue
+                clusters[ci].qubits = cand
+                clusters[ci].members.append(g)
+                for q in touched:
+                    last_touch[q] = ci
+                placed = True
+                break
+        if not placed:
+            clusters.append(_Cluster(tuple(sorted(g.qubits)), [g],
+                                     controls=g.controls))
+            ci = len(clusters) - 1
+            for q in touched:
+                last_touch[q] = ci
+
+    fused: list[Gate] = []
+    for c in clusters:
+        if c.controls:
+            g = c.members[0]
+            m = g.matrix
+            for later in c.members[1:]:
+                m = (later.matrix @ m).astype(np.complex64)
+            fused.append(Gate(c.members[0].qubits, m, controls=c.controls,
+                              name=f"fused{len(c.members)}"))
+        else:
+            fused.append(Gate(c.qubits, c.matrix(),
+                              name=f"fused{len(c.members)}"))
+    return fused
+
+
+def fusion_stats(before: Sequence[Gate], after: Sequence[Gate]) -> dict:
+    return {
+        "gates_before": len(before),
+        "gates_after": len(after),
+        "reduction": len(before) / max(1, len(after)),
+        "max_fused_qubits": max((g.k + len(g.controls) for g in after),
+                                default=0),
+    }

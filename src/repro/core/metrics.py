@@ -1,0 +1,104 @@
+"""Vectorization-activity metrics — TPU analogues of the paper's PMU study.
+
+The paper defines AVL (average active vector length) and IRR (instruction
+reduction ratio) from ARM PMU events (§VII-A).  Without PMUs we compute the
+structural equivalents from the circuit + compiled HLO:
+
+* ALO  (average lane occupancy)   — AVL analogue: active lanes per vector op.
+  The shuffle-based lane path keeps all V lanes active; controlled gates
+  visit only the control-satisfied half of the groups, which the paper counts
+  as *fewer iterations*, not partial predicates, so they do not reduce ALO.
+  What does reduce it: gates whose group count 2**(n-k) < rows touched, i.e.
+  padding when n is tiny — negligible for n >= log2(V)+k.
+* ORR  (op-reduction ratio)       — IRR analogue: HLO op count of the naive
+  dense program divided by the VLA program's (both post-fusion-choice).
+* AI measured                     — flops / bytes from ``cost_analysis``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.circuits import Circuit
+from repro.core.gates import Gate
+from repro.core.target import Target
+
+
+@dataclasses.dataclass
+class GateCost:
+    """Structural cost of applying one (fused) gate to an n-qubit state."""
+    flops: float
+    hbm_bytes: float
+    vector_ops: float
+    active_lanes: float
+
+    @property
+    def ai(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+def gate_cost(g: Gate, n: int, target: Target) -> GateCost:
+    k = g.k
+    groups = 1 << (n - k - len(g.controls))
+    d = 1 << k
+    flops = groups * 2.0 * d * (4 * d - 2)
+    # streamed bytes: touched amplitudes read+written once (re+im fp32)
+    touched = groups * d
+    hbm_bytes = touched * 2 * 4 * 2.0
+    v = target.lanes
+    vector_ops = flops / (2.0 * v)          # 1 FMA-lane-op = 2 flops/lane
+    return GateCost(flops=flops, hbm_bytes=hbm_bytes, vector_ops=vector_ops,
+                    active_lanes=float(min(v, 1 << n)))
+
+
+def circuit_cost(gates: Sequence[Gate], n: int, target: Target) -> GateCost:
+    total_f = total_b = total_v = 0.0
+    act = 0.0
+    for g in gates:
+        c = gate_cost(g, n, target)
+        total_f += c.flops
+        total_b += c.hbm_bytes
+        total_v += c.vector_ops
+        act += c.active_lanes * c.vector_ops
+    return GateCost(flops=total_f, hbm_bytes=total_b, vector_ops=total_v,
+                    active_lanes=act / max(total_v, 1.0))
+
+
+def op_reduction_ratio(naive_gates: Sequence[Gate],
+                       vla_gates: Sequence[Gate], n: int,
+                       target: Target) -> float:
+    """ORR: scalar-equivalent op count of the naive program over the VLA
+    program's vector-op count (the paper's IRR, computed structurally)."""
+    naive = circuit_cost(naive_gates, n, target)
+    vla = circuit_cost(vla_gates, n, target)
+    naive_scalar_ops = naive.flops / 2.0          # scalar FMA = 2 flops
+    return naive_scalar_ops / max(vla.vector_ops, 1.0)
+
+
+def hlo_op_count(fn, *args) -> int:
+    """Number of non-trivial ops in the optimized HLO of fn(*args)."""
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return sum(1 for line in txt.splitlines()
+               if "=" in line and not line.lstrip().startswith(("ROOT", "//")))
+
+
+def measured_ai(fn, *args) -> float:
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return float(c.get("flops", 0.0)) / max(float(c.get("bytes accessed", 1.0)), 1.0)
+
+
+def roofline_time(flops: float, hbm_bytes: float, target: Target,
+                  use_mxu: bool = False) -> dict:
+    """Roofline projection of one circuit on one target (Fig 14/15 analogue)."""
+    peak = target.peak_flops_bf16 if use_mxu else target.peak_flops_f32
+    t_c = flops / peak
+    t_m = hbm_bytes / target.hbm_bw
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "bound": "compute" if t_c > t_m else "memory",
+        "time_s": max(t_c, t_m),
+    }

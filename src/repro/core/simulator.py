@@ -1,0 +1,126 @@
+"""High-level simulator API.
+
+``Simulator`` ties together layout (statevec), fusion, and the execution
+backend:
+
+* ``backend="dense"``  — naive baseline: complex64 interleaved, gate-by-gate,
+  no fusion (the paper's auto-vectorized Qsim stand-in).
+* ``backend="planar"`` — VLA design in pure JAX on the lane-tiled layout.
+* ``backend="pallas"`` — VLA design with explicit Pallas VMEM kernels
+  (interpret mode on CPU; compiled on TPU).
+
+Fusion degree ``f`` defaults to ``choose_f(target)`` — the machine-balance
+adaptation of paper §IV-D.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply as A
+from repro.core import statevec as SV
+from repro.core.circuits import Circuit
+from repro.core.fusion import choose_f, fuse_circuit
+from repro.core.gates import Gate
+from repro.core.target import CPU_TEST, Target
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_dense(n: int, qubits: tuple, controls: tuple):
+    def run(psi, u):
+        return A.apply_gate_dense(psi, n, qubits, u, controls)
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_planar(n: int, qubits: tuple, controls: tuple):
+    def run(data, u_re, u_im):
+        return A.apply_gate_planar(data, n, qubits, u_re, u_im, controls)
+    return jax.jit(run, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_pallas(n: int, v: int, qubits: tuple, controls: tuple,
+                interpret: bool):
+    from repro.kernels.apply_gate import ops as K
+    def run(data, u_re, u_im):
+        return K.apply_fused_gate(data, n, v, qubits, u_re, u_im,
+                                  controls=controls, interpret=interpret)
+    return jax.jit(run, donate_argnums=(0,))
+
+
+@dataclasses.dataclass
+class Simulator:
+    target: Target = CPU_TEST
+    backend: str = "planar"        # dense | planar | pallas
+    f: int | None = None           # horizontal fusion degree; None = auto
+    fuse: bool = True
+    interpret: bool = True         # Pallas interpret mode (CPU container)
+
+    def __post_init__(self):
+        if self.f is None:
+            self.f = choose_f(self.target) if self.fuse else 0
+
+    # -- preparation ----------------------------------------------------------
+    def prepare(self, circuit: Circuit) -> list[Gate]:
+        if not self.fuse or self.backend == "dense":
+            return list(circuit.gates)
+        # cap f so fused gates stay within the row/lane budget of the state
+        f = max(2, min(self.f, circuit.n))
+        return fuse_circuit(circuit.gates, f)
+
+    # -- execution ------------------------------------------------------------
+    def run(self, circuit: Circuit,
+            initial: SV.State | None = None) -> SV.State:
+        gates = self.prepare(circuit)
+        if self.backend == "dense":
+            psi = (initial.to_dense() if initial is not None
+                   else jnp.zeros(1 << circuit.n, jnp.complex64).at[0].set(1))
+            for g in gates:
+                fn = _jit_dense(circuit.n, g.qubits, g.controls)
+                psi = fn(psi, jnp.asarray(g.matrix))
+            return SV.from_dense(psi, circuit.n, self.target)
+
+        state = initial if initial is not None else SV.zero_state(
+            circuit.n, self.target)
+        data = state.data
+        for g in gates:
+            u_re, u_im = A.gate_arrays(g)
+            if self.backend == "planar":
+                fn = _jit_planar(circuit.n, g.qubits, g.controls)
+            elif self.backend == "pallas":
+                fn = _jit_pallas(circuit.n, state.v, g.qubits, g.controls,
+                                 self.interpret)
+            else:
+                raise ValueError(f"unknown backend {self.backend!r}")
+            data = fn(data, u_re, u_im)
+        return SV.State(data=data, n=circuit.n, v=state.v)
+
+    # -- observables -----------------------------------------------------------
+    def expectation_z(self, state: SV.State, qubit: int) -> jax.Array:
+        """<Z_q> — computed as a streaming reduction (paper's
+        ExpectationValue avoids storing states back)."""
+        from repro.kernels.expectation import ops as E
+        if self.backend == "pallas":
+            return E.expectation_z(state.data, state.n, state.v, qubit,
+                                   interpret=self.interpret)
+        return E.expectation_z_ref(state.data, state.n, state.v, qubit)
+
+    def probabilities(self, state: SV.State) -> jax.Array:
+        d = state.data.reshape(2, -1)
+        return d[0] * d[0] + d[1] * d[1]
+
+    def sample(self, state: SV.State, n_samples: int,
+               key: jax.Array | None = None) -> jax.Array:
+        from repro.core import measure as ME
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return ME.sample(state, n_samples, key)
+
+    def expectation_pauli(self, state: SV.State, paulis) -> jax.Array:
+        from repro.core import measure as ME
+        return ME.expectation_pauli(state, paulis)

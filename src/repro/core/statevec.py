@@ -1,0 +1,87 @@
+"""Lane-tiled planar state vector — the paper's VLEN-adaptive memory layout.
+
+The paper converts Qsim's interleaved complex array ``re0 im0 re1 im1 ...``
+into blocks of ``numVals`` reals followed by ``numVals`` imaginaries so every
+SVE load is unit-stride (§IV-A).  The TPU-native equivalent is a *planar,
+lane-tiled* layout::
+
+    data : f32[2, R, V]     R = 2**n / V,  V = target.lanes
+
+``data[0]`` holds real parts, ``data[1]`` imaginary parts; the minor axis V is
+a full contiguous vector tile.  Amplitude index ``x`` lives at
+``(x // V, x % V)`` — i.e. qubits ``0 .. log2(V)-1`` ("lane qubits") occupy the
+lane axis and qubits ``log2(V) .. n-1`` ("row qubits") the row axis.
+
+The conversion from/to the dense complex layout is done once at state
+initialization / readout, matching the paper's "two additional loops out of
+size 2^{n-1} in the initialization stage".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.target import Target
+
+
+@dataclasses.dataclass
+class State:
+    """An n-qubit state in lane-tiled planar layout."""
+
+    data: jax.Array  # f32[2, R, V]
+    n: int           # number of qubits
+    v: int           # log2(lanes)
+
+    @property
+    def lanes(self) -> int:
+        return 1 << self.v
+
+    @property
+    def rows(self) -> int:
+        return 1 << (self.n - self.v)
+
+    def to_dense(self) -> jax.Array:
+        """Return the c64[2**n] dense (interleaved, Qsim-native) layout."""
+        flat = self.data.reshape(2, 1 << self.n)
+        return flat[0].astype(jnp.complex64) + 1j * flat[1].astype(jnp.complex64)
+
+    def norm_sq(self) -> jax.Array:
+        return jnp.sum(self.data.astype(jnp.float64) ** 2)
+
+
+def _check_sizes(n: int, lanes: int) -> int:
+    v = lanes.bit_length() - 1
+    if (1 << v) != lanes:
+        raise ValueError(f"lanes must be a power of two, got {lanes}")
+    if n < v:
+        raise ValueError(f"need n >= log2(lanes): n={n}, lanes={lanes}")
+    return v
+
+
+def zero_state(n: int, target: Target) -> State:
+    """|0...0> in lane-tiled layout."""
+    v = _check_sizes(n, target.lanes)
+    data = jnp.zeros((2, 1 << (n - v), 1 << v), jnp.float32)
+    data = data.at[0, 0, 0].set(1.0)
+    return State(data=data, n=n, v=v)
+
+
+def from_dense(psi: jax.Array | np.ndarray, n: int, target: Target) -> State:
+    """Layout adjustment: interleaved complex -> planar lane-tiled (paper §IV-A)."""
+    v = _check_sizes(n, target.lanes)
+    psi = jnp.asarray(psi).reshape(1 << n)
+    planes = jnp.stack([jnp.real(psi), jnp.imag(psi)]).astype(jnp.float32)
+    return State(data=planes.reshape(2, 1 << (n - v), 1 << v), n=n, v=v)
+
+
+def random_state(n: int, target: Target, seed: int = 0) -> State:
+    """Haar-ish random normalized state (for tests/benchmarks)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    re = jax.random.normal(k1, (1 << n,), jnp.float32)
+    im = jax.random.normal(k2, (1 << n,), jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(re * re + im * im))
+    psi = (re + 1j * im) / nrm
+    return from_dense(psi, n, target)

@@ -1,0 +1,2 @@
+from repro.kernels.apply_gate.ops import apply_fused_gate, apply_circuit  # noqa: F401
+from repro.kernels.apply_gate.ref import apply_fused_gate_ref  # noqa: F401

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel for fused-gate application (the paper's ApplyGate ROI).
+
+The state is viewed (zero-copy reshape of the flat 2**n index space) as
+
+    f32[2, d_1, d_2, ..., d_m, tail]
+
+where each gate/control bit is isolated as its own size-2 axis (descending
+significance) and the spans between bits are single axes.  The BlockSpec takes
+the *full* extent of every gate axis and one coordinate of every other axis,
+so a single VMEM block is exactly one state group: 2**k rows x ``tail_blk``
+lanes of re+im — the paper's 2**k scattered unit-stride vector loads, staged
+through VMEM (load-buffering optimization §IV-B).
+
+Inside the kernel the block collapses to (2, 2**k, tail_blk) and the gate is
+four real matmuls (complex FMA formulation).  For fused degree f = 7 the
+matmul is 128x128 — a native MXU tile (DESIGN.md §2, beyond-paper lever).
+
+Controlled gates: control bits are grid axes; the kernel applies the unitary
+only where every control coordinate is 1 and copies through otherwise —
+functionally the paper's predicated iteration.  (A later optimization aliases
+in/out so control-0 blocks are skipped entirely; see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewPlan:
+    """How the flat state index space is factorized for the kernel."""
+    dims: tuple[int, ...]          # axis sizes after the plane axis
+    roles: tuple[str, ...]         # 'gate' | 'ctrl' | 'seg' | 'tail'
+    block: tuple[int, ...]         # block size per axis
+    grid_sizes: tuple[int, ...]    # number of blocks per axis (1 for gate axes)
+    k: int                         # number of gate bits
+
+    @property
+    def grid(self) -> int:
+        return math.prod(self.grid_sizes)
+
+
+def make_plan(n: int, gate_bits: Sequence[int], ctrl_bits: Sequence[int],
+              max_block_bytes: int = 1 << 20) -> ViewPlan:
+    """Factorize the 2**n index space around the gate/control bits."""
+    marked = sorted(
+        [(b, "gate") for b in gate_bits] + [(b, "ctrl") for b in ctrl_bits],
+        reverse=True)
+    dims: list[int] = []
+    roles: list[str] = []
+    prev = n
+    for b, role in marked:
+        seg = prev - b - 1
+        if seg > 0:
+            dims.append(1 << seg)
+            roles.append("seg")
+        dims.append(2)
+        roles.append(role)
+        prev = b
+    tail = 1 << prev
+    # split the tail so one block stays within the VMEM budget
+    k = len(gate_bits)
+    budget_elems = max(1, max_block_bytes // (2 * 4 * (1 << k) * 2))
+    tail_blk = min(tail, 1 << max(0, budget_elems.bit_length() - 1))
+    if tail // tail_blk > 1:
+        dims.append(tail // tail_blk)
+        roles.append("seg")
+    dims.append(tail_blk)
+    roles.append("tail")
+
+    block = tuple(2 if r == "gate" else (d if r == "tail" else 1)
+                  for d, r in zip(dims, roles))
+    grid_sizes = tuple(d // b for d, b in zip(dims, block))
+    return ViewPlan(tuple(dims), tuple(roles), block, grid_sizes, k)
+
+
+def _unravel(flat, sizes: Sequence[int]):
+    """Split a flat index into per-axis coordinates (row-major)."""
+    coords = []
+    rem = flat
+    stride = math.prod(sizes)
+    for s in sizes:
+        stride //= s
+        coords.append(rem // stride)
+        rem = rem % stride
+    return coords
+
+
+def _kernel(u_re_ref, u_im_ref, x_ref, o_ref, *, plan: ViewPlan):
+    k = plan.k
+    tail_blk = plan.block[-1]
+    ctrl_axes = [i for i, r in enumerate(plan.roles) if r == "ctrl"]
+
+    def compute():
+        x = x_ref[...]
+        x = x.reshape(2, 1 << k, tail_blk)
+        re, im = x[0], x[1]
+        u_re = u_re_ref[...]
+        u_im = u_im_ref[...]
+        # complex matvec as four real matmuls (fp32 accumulation)
+        o_re = jnp.dot(u_re, re, preferred_element_type=jnp.float32) - \
+            jnp.dot(u_im, im, preferred_element_type=jnp.float32)
+        o_im = jnp.dot(u_re, im, preferred_element_type=jnp.float32) + \
+            jnp.dot(u_im, re, preferred_element_type=jnp.float32)
+        o_ref[...] = jnp.stack([o_re, o_im]).reshape(x_ref.shape)
+
+    if not ctrl_axes:
+        compute()
+        return
+
+    g = pl.program_id(0)
+    coords = _unravel(g, plan.grid_sizes)
+    pred = coords[ctrl_axes[0]] == 1
+    for a in ctrl_axes[1:]:
+        pred = jnp.logical_and(pred, coords[a] == 1)
+
+    @pl.when(pred)
+    def _():
+        compute()
+
+    @pl.when(jnp.logical_not(pred))
+    def _():
+        o_ref[...] = x_ref[...]
+
+
+def apply_fused_gate_kernel(data_flat: jax.Array, u_re: jax.Array,
+                            u_im: jax.Array, plan: ViewPlan,
+                            interpret: bool = True) -> jax.Array:
+    """Run the kernel on the flat planar state f32[2, 2**n]."""
+    shaped = data_flat.reshape((2,) + plan.dims)
+
+    def idx_map(g):
+        coords = _unravel(g, plan.grid_sizes)
+        return (0,) + tuple(coords)
+
+    zero_map = lambda g: (0, 0)
+    spec = pl.BlockSpec((2,) + plan.block, idx_map)
+    dim = u_re.shape[0]
+    u_spec = pl.BlockSpec((dim, dim), zero_map)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, plan=plan),
+        grid=(plan.grid,),
+        in_specs=[u_spec, u_spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shaped.shape, jnp.float32),
+        interpret=interpret,
+    )(u_re, u_im, shaped)
+    return out.reshape(data_flat.shape)

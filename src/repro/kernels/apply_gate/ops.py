@@ -1,0 +1,62 @@
+"""Jit'd public wrapper for the fused-gate Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.apply_gate.apply_gate import (
+    ViewPlan, apply_fused_gate_kernel, make_plan)
+
+
+@functools.lru_cache(maxsize=1024)
+def _sort_perm(qubits: tuple[int, ...]) -> tuple[tuple[int, ...], np.ndarray]:
+    """Permutation taking U (bit m <-> qubits[m]) to sorted-qubit order."""
+    qs_sorted = tuple(sorted(qubits))
+    pos = {q: m for m, q in enumerate(qubits)}
+    k = len(qubits)
+    perm = np.zeros(1 << k, np.int32)
+    for j in range(1 << k):
+        j_orig = 0
+        for m in range(k):
+            if (j >> m) & 1:
+                j_orig |= 1 << pos[qs_sorted[m]]
+        perm[j] = j_orig
+    return qs_sorted, perm
+
+
+def apply_fused_gate(data: jax.Array, n: int, v: int,
+                     qubits: tuple[int, ...], u_re: jax.Array,
+                     u_im: jax.Array, controls: tuple[int, ...] = (),
+                     interpret: bool = True,
+                     max_block_bytes: int = 1 << 20) -> jax.Array:
+    """Apply a (fused, optionally controlled) gate to the planar state.
+
+    data: f32[2, R, V] lane-tiled planar state (R * V = 2**n).
+    qubits: target qubit ids; bit m of u's index <-> qubits[m].
+    """
+    qs_sorted, perm = _sort_perm(tuple(qubits))
+    if qs_sorted != tuple(qubits):
+        p = jnp.asarray(perm)
+        u_re = u_re[p][:, p]
+        u_im = u_im[p][:, p]
+    plan = make_plan(n, qs_sorted, tuple(sorted(controls)),
+                     max_block_bytes=max_block_bytes)
+    flat = data.reshape(2, 1 << n)
+    out = apply_fused_gate_kernel(flat, u_re, u_im, plan, interpret=interpret)
+    return out.reshape(data.shape)
+
+
+def apply_circuit(data: jax.Array, n: int, v: int, gates,
+                  interpret: bool = True) -> jax.Array:
+    """Apply a list of core.gates.Gate sequentially through the kernel."""
+    for g in gates:
+        u = np.asarray(g.matrix)
+        data = apply_fused_gate(
+            data, n, v, g.qubits,
+            jnp.asarray(u.real, jnp.float32), jnp.asarray(u.imag, jnp.float32),
+            controls=g.controls, interpret=interpret)
+    return data

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused-gate kernel.
+
+Deliberately takes a different code path from the kernel: the planar state is
+converted to the dense complex vector, the gate is applied with the complex
+tensor-contraction reference (``core.apply.apply_gate_dense``), and the result
+converted back — so a bug in the planar index math cannot cancel out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apply import apply_gate_dense
+
+
+def apply_fused_gate_ref(data: jax.Array, n: int, v: int,
+                         qubits: tuple[int, ...], u_re: jax.Array,
+                         u_im: jax.Array,
+                         controls: tuple[int, ...] = ()) -> jax.Array:
+    flat = data.reshape(2, 1 << n)
+    psi = flat[0].astype(jnp.complex64) + 1j * flat[1].astype(jnp.complex64)
+    u = u_re.astype(jnp.complex64) + 1j * u_im.astype(jnp.complex64)
+    psi = apply_gate_dense(psi, n, tuple(qubits), u, tuple(controls))
+    out = jnp.stack([jnp.real(psi), jnp.imag(psi)]).astype(jnp.float32)
+    return out.reshape(data.shape)

@@ -1,0 +1,1 @@
+from repro.kernels.expectation.ops import expectation_z, expectation_z_ref  # noqa: F401

@@ -1,0 +1,50 @@
+"""Pallas reduction kernel for <Z_q> — the paper's ExpectationValue ROI.
+
+Streams the state once, accumulating sum((-1)^{bit_q(x)} |amp_x|^2) into a
+scalar without storing any state back (paper §IV: "sum up the magnitude ...
+instead of storing final states back to memory").
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.apply_gate.apply_gate import ViewPlan, _unravel, make_plan
+
+
+def _kernel(x_ref, o_ref, *, plan: ViewPlan):
+    g = pl.program_id(0)
+
+    x = x_ref[...]
+    x = x.reshape(2, 2, -1)                  # planes, qubit axis, rest
+    p = x[0] * x[0] + x[1] * x[1]
+    z = jnp.sum(p[0]) - jnp.sum(p[1])
+
+    @pl.when(g == 0)
+    def _():
+        o_ref[0, 0] = 0.0
+
+    o_ref[0, 0] += z
+
+
+def expectation_z_kernel(data_flat: jax.Array, plan: ViewPlan,
+                         interpret: bool = True) -> jax.Array:
+    shaped = data_flat.reshape((2,) + plan.dims)
+
+    def idx_map(g):
+        return (0,) + tuple(_unravel(g, plan.grid_sizes))
+
+    spec = pl.BlockSpec((2,) + plan.block, idx_map)
+    out = pl.pallas_call(
+        functools.partial(_kernel, plan=plan),
+        grid=(plan.grid,),
+        in_specs=[spec],
+        out_specs=pl.BlockSpec((1, 1), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(shaped)
+    return out[0, 0]

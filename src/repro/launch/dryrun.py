@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this prints/records:
+  * ``compiled.memory_analysis()``  — per-device bytes (proves it fits)
+  * ``compiled.cost_analysis()``    — raw XLA FLOPs/bytes
+  * scan-corrected HLO FLOPs + collective bytes (repro.launch.hlo_analysis)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh pod2
+  python -m repro.launch.dryrun --all [--out results.jsonl]    # every cell
+  python -m repro.launch.dryrun --quantum                      # paper cells
+
+The XLA_FLAGS line above must execute before ANY other import so the 512
+placeholder devices exist when jax initializes.
+"""
+
+import argparse
+import json
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_archs, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models.config import SHAPES, applicable_shapes
+from repro.parallel import sharding as SH
+
+MESHES = {"pod1": False, "pod2": True}
+
+
+def _mesh(name: str):
+    return make_production_mesh(multi_pod=MESHES[name])
+
+
+def _tree_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, SH.clean_spec(mesh, s)), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str,
+               strategy: str | None = None):
+    """Lower+compile one cell; returns a result dict."""
+    import dataclasses
+    cfg = get_config(arch)
+    if strategy:
+        cfg = dataclasses.replace(cfg, strategy=strategy)
+    shape = SHAPES[shape_name]
+    mesh = _mesh(mesh_name)
+    t0 = time.time()
+    with SH.use_mesh(mesh):
+        in_specs = M.input_specs(cfg, shape)
+        in_shard = _tree_shardings(mesh, M.input_shardings(cfg, shape))
+        ap = T.abstract_params(cfg)
+        pspec, ospec = M.state_shardings(cfg)
+        pshard = _tree_shardings(mesh, pspec)
+
+        if shape.kind == "train":
+            from repro.optim import abstract_opt_state
+            aos = abstract_opt_state(ap)
+            oshard = _tree_shardings(mesh, ospec)
+            step = M.make_train_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, in_shard),
+                out_shardings=(NamedSharding(mesh, P()), pshard, oshard,
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(ap, aos, in_specs)
+        elif shape.kind == "prefill":
+            step = M.make_prefill_step(cfg)
+            jitted = jax.jit(
+                step, in_shardings=(pshard, in_shard),
+                out_shardings=NamedSharding(
+                    mesh, SH.clean_spec(mesh, P(SH.BATCH_AXES, None, None))))
+            lowered = jitted.lower(ap, in_specs)
+        else:  # decode
+            ac = M.cache_specs(cfg, shape)
+            cshard = _tree_shardings(mesh, M.cache_shardings(cfg, shape))
+            step = M.make_serve_step(cfg)
+            jitted = jax.jit(
+                step, in_shardings=(pshard, cshard, in_shard),
+                out_shardings=(NamedSharding(mesh, P()), cshard),
+                donate_argnums=(1,))
+            lowered = jitted.lower(ap, ac, in_specs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analyze_hlo(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "strategy": cfg.strategy,
+        "devices": int(n_dev),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "hlo": hlo.to_dict(),
+        "params": get_config(arch).param_count(),
+        "active_params": get_config(arch).active_param_count(),
+    }
+    return res
+
+
+def lower_quantum(n_qubits: int, mesh_name: str, circuit: str = "qrc",
+                  depth: int = 8, f: int | None = None):
+    """Dry-run the paper's own workload on the production mesh."""
+    from repro.core import circuits as C
+    from repro.core.distributed import DistributedSimulator
+    from repro.core.target import TPU_V5E
+
+    mesh = _mesh(mesh_name)
+    kw = {"depth": depth} if circuit == "qrc" else {}
+    circ = C.build(circuit, n_qubits, **kw)
+    t0 = time.time()
+    ds = DistributedSimulator(n_qubits, mesh, TPU_V5E, f=f)
+    fn, planes, swap_counter, _ = ds.build_step(circ)
+    state = ds.global_state_shape()
+    lowered = fn.lower(state, *[jax.ShapeDtypeStruct(p.shape, p.dtype)
+                                for p in planes])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+    return {
+        "arch": f"quantum-{circuit}{n_qubits}",
+        "shape": f"f{ds.f}",
+        "mesh": mesh_name,
+        "devices": int(mesh.devices.size),
+        "kind": "quantum",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "fused_gates": len(planes),
+        "swaps": swap_counter["swaps"],
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_per_device_bytes": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "hlo": hlo.to_dict(),
+    }
+
+
+def iter_cells():
+    for arch in all_archs():
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--strategy", default=None, choices=[None, "tp", "fsdp"])
+    ap.add_argument("--mesh", default="pod1", choices=list(MESHES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quantum", action="store_true")
+    ap.add_argument("--qubits", type=int, default=36)
+    ap.add_argument("--f", type=int, default=None,
+                    help="fusion degree override (quantum cells)")
+    ap.add_argument("--circuit", default="qrc")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as fh:
+            for line in fh:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    def emit(res):
+        line = json.dumps(res)
+        print(line, flush=True)
+        if args.out:
+            with open(args.out, "a") as fh:
+                fh.write(line + "\n")
+
+    if args.quantum:
+        for mesh_name in MESHES:
+            res = lower_quantum(args.qubits, mesh_name, circuit=args.circuit,
+                                f=args.f)
+            emit(res)
+        return 0
+
+    if args.all:
+        failures = []
+        for mesh_name in MESHES:
+            for arch, shape in iter_cells():
+                if (arch, shape, mesh_name) in done:
+                    continue
+                try:
+                    emit(lower_cell(arch, shape, mesh_name))
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mesh_name, repr(e)))
+                    print(f"FAIL {arch} {shape} {mesh_name}: {e!r}",
+                          file=sys.stderr, flush=True)
+        if failures:
+            print(f"{len(failures)} cell(s) failed", file=sys.stderr)
+            return 1
+        return 0
+
+    res = lower_cell(args.arch, args.shape, args.mesh,
+                     strategy=args.strategy)
+    emit(res)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

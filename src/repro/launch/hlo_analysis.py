@@ -1,0 +1,210 @@
+"""Post-compile HLO analysis: scan-corrected FLOPs and collective bytes.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count, which silently hides scanned-layer cost (a 46-layer model reports ~1
+layer of FLOPs).  This module parses the optimized HLO text instead:
+
+* every ``dot``/``convolution`` contributes 2 x prod(result_shape) x
+  prod(contracted dims) FLOPs (operand shapes resolved via a symbol table,
+  since optimized HLO prints operands by name only);
+* every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all``
+  / ``collective-permute`` contributes its result bytes;
+* each op is weighted by the product of ``known_trip_count`` values of the
+  while-loops enclosing its computation (jax.lax.scan emits these), so
+  scanned layers are counted ``num_layers`` times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLSITE_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{[^}]*)"
+    r"%([\w\.\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _all_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            shape = [int(d) for d in dims.split(",") if d]
+            total += _DTYPE_BYTES[dt] * math.prod(shape) if shape \
+                else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_bytes_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "collective_bytes": self.collective_bytes,
+            "collective_counts": dict(self.collective_counts),
+            "collective_bytes_by_kind": dict(self.collective_bytes_by_kind),
+        }
+
+
+def _split_computations(text: str):
+    """{comp_name: [lines]}; a header is a non-indented line ending in '{'."""
+    comps: dict[str, list[str]] = {}
+    cur: list[str] | None = None
+    entry = None
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace() and raw.rstrip().endswith("{") \
+                and "(" in raw:
+            head = raw.strip()
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].strip()
+            name = head.split("(", 1)[0].strip().lstrip("%").strip()
+            cur = []
+            comps[name] = cur
+            if is_entry:
+                entry = name
+        elif raw.startswith("}"):
+            cur = None
+        elif cur is not None:
+            cur.append(raw.strip())
+    return comps, entry
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps, entry = _split_computations(text)
+    if not comps:
+        return HloStats()
+    if entry is None:
+        entry = next(iter(comps))
+
+    # symbol table: op name -> (dtype, shape) of its (first) result
+    shapes: dict[str, tuple[str, list[int]]] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _ASSIGN_RE.match(line)
+            if m:
+                sh = _first_shape(m.group(2))
+                if sh:
+                    shapes[m.group(1)] = sh
+
+    # computation -> call sites (parent computation, trip multiplier)
+    sites: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for cname, lines in comps.items():
+        for line in lines:
+            trips = 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+            for callee in _CALLSITE_RE.findall(line):
+                sites[callee].append((cname, trips))
+
+    mult_cache: dict[str, float] = {}
+
+    def multiplier(cname: str) -> float:
+        if cname == entry:
+            return 1.0
+        if cname in mult_cache:
+            return mult_cache[cname]
+        mult_cache[cname] = 0.0  # break cycles
+        total = 0.0
+        for parent, trips in sites.get(cname, []):
+            if parent == cname:
+                continue
+            total += multiplier(parent) * trips
+        mult_cache[cname] = total
+        return total
+
+    stats = HloStats()
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        if mult == 0.0:
+            continue
+        for line in lines:
+            if " dot(" in line:
+                stats.flops += mult * _dot_flops(line, shapes)
+            elif " convolution(" in line:
+                stats.flops += mult * _conv_flops(line, shapes)
+            else:
+                for kind in _COLLECTIVES:
+                    if f" {kind}(" in line or f" {kind}-start(" in line:
+                        m = _ASSIGN_RE.match(line)
+                        nbytes = _all_shape_bytes(
+                            m.group(2).split(kind)[0]) if m else 0
+                        stats.collective_bytes += mult * nbytes
+                        stats.collective_counts[kind] += mult
+                        stats.collective_bytes_by_kind[kind] += mult * nbytes
+                        break
+    return stats
+
+
+def _operands(line: str, op: str) -> list[str]:
+    m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+
+
+def _dot_flops(line: str, shapes) -> float:
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return 0.0
+    res = _first_shape(m.group(2))
+    if res is None:
+        return 0.0
+    ops = _operands(line, "dot")
+    c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if not ops or ops[0] not in shapes or not c:
+        return 0.0
+    lhs_shape = shapes[ops[0]][1]
+    cdims = [int(x) for x in c.group(1).split(",") if x]
+    try:
+        contracted = math.prod(lhs_shape[d] for d in cdims) if cdims else 1
+    except IndexError:
+        return 0.0
+    return 2.0 * math.prod(res[1] or [1]) * contracted
+
+
+def _conv_flops(line: str, shapes) -> float:
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return 0.0
+    res = _first_shape(m.group(2))
+    if res is None:
+        return 0.0
+    ops = _operands(line, "convolution")
+    if len(ops) < 2 or ops[1] not in shapes:
+        return 0.0
+    kernel = shapes[ops[1]][1]
+    out_elems = math.prod(res[1] or [1])
+    kernel_elems = math.prod(kernel or [1])
+    out_ch = res[1][-1] if res[1] else 1
+    return 2.0 * out_elems * kernel_elems / max(out_ch, 1)

@@ -1,0 +1,66 @@
+"""Serving driver: batched greedy decoding with a KV/SSM cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --smoke \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.models import model as M, transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(key, cfg)
+    smax = args.prompt_len + args.gen
+    cache = T.init_cache(cfg, args.batch, smax)
+    if cfg.family == "audio":
+        cache["enc"] = jnp.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    serve = jax.jit(M.make_serve_step(cfg))
+
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size, jnp.int32)
+    # feed the prompt token by token (cache warmup), then greedy-decode
+    tok = prompt[:, :1]
+    t0 = time.time()
+    out_tokens = []
+    for pos in range(smax - 1):
+        logits, cache = serve(params, cache,
+                              {"token": tok, "pos": jnp.asarray(pos,
+                                                                jnp.int32)})
+        if pos + 1 < args.prompt_len:
+            tok = prompt[:, pos + 1:pos + 2]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(
+                jnp.int32)
+            out_tokens.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"{cfg.name}: generated {gen.shape} in {dt:.2f}s "
+          f"({gen.size / dt:.1f} tok/s)")
+    print("sample:", gen[0][:16].tolist())
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab_size)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,191 @@
+"""Model + run-shape configuration system.
+
+``ModelConfig`` is the single architecture description consumed by the model
+builders; one instance per assigned architecture lives in ``repro.configs``.
+``ShapeConfig`` describes the four assigned input-shape regimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | vlm | audio | ssm | moe | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: float = 0.0        # gemma2 attention-logit softcap
+    logit_softcap: float = 0.0       # gemma2 final-logit softcap
+    sliding_window: int = 0          # 0 = full attention
+    alt_local_global: bool = False   # gemma2: alternate local/global layers
+    rope_theta: float = 10000.0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2 / xlstm)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    slstm_every: int = 0             # xlstm: every k-th layer is an sLSTM
+    attn_every: int = 0              # zamba2: shared attn block every k layers
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper 30s @ 50 Hz after conv stub
+
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+
+    # Parallelism strategy (EXPERIMENTS.md §Perf):
+    #   "tp"   — Megatron tensor parallelism over the model axis (baseline)
+    #   "fsdp" — ZeRO-3: params sharded over (data x model), activations
+    #            batch-sharded over (pod, data) and sequence-sharded over
+    #            model.  Wins when the model is small enough that per-layer
+    #            TP activation all-reduces dwarf parameter all-gathers.
+    strategy: str = "tp"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 (Megatron-style padding) so
+        the embedding/head shard cleanly over the model axis."""
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def layer_kinds(self) -> list[str]:
+        """Per-layer block kind; drives scanned-layer grouping."""
+        kinds = []
+        for i in range(self.num_layers):
+            if self.family == "ssm":
+                if self.slstm_every and (i + 1) % self.slstm_every == 0:
+                    kinds.append("slstm")
+                else:
+                    kinds.append("mlstm")
+            elif self.family == "hybrid":
+                kinds.append("mamba")
+            elif self.alt_local_global:
+                kinds.append("local" if i % 2 == 0 else "global")
+            else:
+                kinds.append("attn")
+        return kinds
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, ff, v, hd = self.d_model, self.d_ff, self.vocab_size, self.hd
+        h, k = self.num_heads, self.num_kv_heads
+        n = v * d                                  # embedding
+        if not self.tie_embeddings:
+            n += v * d
+        per_layer = 0
+        kinds = self.layer_kinds()
+        for kind in kinds:
+            if kind in ("attn", "local", "global"):
+                attn = d * h * hd + 2 * d * k * hd + h * hd * d
+                if self.qkv_bias:
+                    attn += (h + 2 * k) * hd
+                per_layer += attn + 2 * d          # norms
+                if self.is_moe:
+                    e, dff = self.num_experts, self.d_ff
+                    per_layer += d * e + e * 3 * d * dff
+                else:
+                    per_layer += 3 * d * ff
+            elif kind == "mamba":
+                di = self.d_inner
+                g_n = 2 * self.ssm_state           # B and C, single group
+                per_layer += d * (2 * di + 2 * g_n + self.ssm_heads)
+                per_layer += di * d + 3 * self.ssm_heads + di + d
+            elif kind == "mlstm":
+                di = self.d_inner
+                per_layer += d * 3 * di + 3 * di + di * d + 2 * d
+            elif kind == "slstm":
+                per_layer += 4 * d * d + 4 * d + 2 * d
+        n += per_layer
+        n += d                                      # final norm
+        if self.family == "hybrid" and self.attn_every:
+            attn = d * h * hd + 2 * d * k * hd + h * hd * d
+            n += attn + 3 * d * ff + 2 * d          # one shared block
+        if self.is_encoder_decoder:
+            enc = self.encoder_layers * (
+                d * h * hd * 2 + 2 * d * k * hd + 3 * d * ff + 2 * d)
+            dec_cross = self.num_layers * (d * h * hd + 2 * d * k * hd
+                                           + h * hd * d + d)
+            n += enc + dec_cross
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE-aware)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, e, dff = self.d_model, self.num_experts, self.d_ff
+        topk = self.experts_per_token
+        dense = self.param_count() - self.num_layers * e * 3 * d * dff
+        return dense + self.num_layers * topk * 3 * d * dff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# long_500k requires sub-quadratic sequence handling; pure full-attention
+# archs skip it (documented in DESIGN.md §Arch-applicability).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[ShapeConfig]:
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.family in LONG_CONTEXT_FAMILIES:
+        out.append(LONG_500K)
+    return out

@@ -1,0 +1,165 @@
+"""Model registry: step builders + input specs per (arch x shape).
+
+This is the surface the launcher and dry-run consume:
+
+* ``input_specs(cfg, shape)``    -> pytree of ShapeDtypeStruct (no alloc)
+* ``input_shardings(cfg, shape)``-> matching PartitionSpec pytree
+* ``make_train_step(cfg)``       -> fn(params, opt_state, batch) ->
+                                    (loss, params, opt_state, gnorm)
+* ``make_prefill_step(cfg)``     -> fn(params, batch) -> last logits
+* ``make_serve_step(cfg)``       -> fn(params, cache, batch) ->
+                                    (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_update
+from repro.parallel import sharding as SH
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; the modality frontend is a stub —
+# audio/vlm entries receive precomputed frame/patch embeddings)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "audio":
+            batch["enc_features"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "audio":
+            batch["enc_features"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return batch
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    """Batch dim over (pod, data) when divisible; else replicated
+    (long-context decode with global_batch=1 shards the KV cache instead)."""
+    dp = 1
+    for a in SH.BATCH_AXES:
+        dp *= SH.axis_size(a)
+    bspec = P(SH.BATCH_AXES) if (dp > 1 and shape.global_batch % dp == 0) \
+        else P()
+    if shape.kind == "train":
+        out = {"tokens": bspec, "labels": bspec}
+        if cfg.family == "audio":
+            out["enc_features"] = P(SH.BATCH_AXES, None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": bspec}
+        if cfg.family == "audio":
+            out["enc_features"] = P(SH.BATCH_AXES, None, None)
+        return out
+    return {"token": bspec, "pos": P()}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    return T.init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    """KV caches: batch over (pod, data) when divisible, else sequence over
+    data (long-context serving); kv-head axis over model when divisible."""
+    cs = cache_specs(cfg, shape)
+    b = shape.global_batch
+    dp = 1
+    for a in SH.BATCH_AXES:
+        dp *= SH.axis_size(a)
+    batch_ok = b % dp == 0 if dp > 1 else False
+    tp = SH.axis_size(SH.MODEL_AXIS)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            # (L, B, S, K, hd) or (G, B, S, K, hd)
+            kv = leaf.shape[-2]
+            kv_ax = "model" if (tp > 1 and kv % tp == 0) else None
+            if batch_ok:
+                return P(None, SH.BATCH_AXES, None, kv_ax, None)
+            return P(None, None, "data", kv_ax, None)
+        if name in ("ssm", "conv", "mlstm", "slstm"):
+            bdim = {"ssm": 2, "conv": 2, "mlstm": 2, "slstm": 1}[name]
+            entries = [None] * nd
+            if batch_ok:
+                entries[bdim] = SH.BATCH_AXES
+            return P(*entries)
+        if name == "enc":
+            return P(SH.BATCH_AXES, None, None) if batch_ok else P()
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cs)
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig | None = None):
+    opt = opt or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch))(params)
+        params, opt_state, gnorm = adamw_update(opt, params, grads, opt_state)
+        return loss, params, opt_state, gnorm
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["tokens"],
+                         enc_features=batch.get("enc_features"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        return T.serve_step(params, cfg, cache, batch["token"], batch["pos"])
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# convenience: everything the dry-run needs for one (arch, shape) cell
+# --------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig):
+    ap = T.abstract_params(cfg)
+    from repro.optim import abstract_opt_state
+    return ap, abstract_opt_state(ap)
+
+
+def state_shardings(cfg: ModelConfig):
+    ps = T.param_shardings(cfg)
+    from repro.optim import opt_state_shardings
+    ap = T.abstract_params(cfg)
+    return ps, opt_state_shardings(ps, ap)

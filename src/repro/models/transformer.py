@@ -1,0 +1,510 @@
+"""Unified LM: dense / MoE / SSM / hybrid / enc-dec families.
+
+One parameter schema + three entry points per family:
+
+* ``forward_train(params, cfg, tokens)``      -> logits  (scan over layers,
+  remat per block)
+* ``prefill(params, cfg, tokens)``            -> (last-position logits, cache)
+* ``serve_step(params, cfg, cache, tok, pos)``-> (logits, cache)  (1 token)
+
+Layer parameters are stacked along a leading axis and consumed by
+``jax.lax.scan`` — one compiled block instance regardless of depth, which
+keeps multi-pod dry-run compiles cheap and HLO sizes bounded.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as SH
+
+PyTree = Any
+BIG_WINDOW = 1 << 30
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+
+def _init_attn_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_mamba_block(key, cfg: ModelConfig):
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mamba": L.init_mamba(key, cfg),
+    }
+
+
+def _init_mlstm_block(key, cfg: ModelConfig):
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlstm": L.init_mlstm(key, cfg),
+    }
+
+
+def _init_slstm_block(key, cfg: ModelConfig):
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "slstm": L.init_slstm(key, cfg),
+    }
+
+
+def _init_encoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_decoder_block_xattn(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p = _init_attn_block(ks[0], cfg)
+    p["ln_x"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["xattn"] = L.init_attention(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (v, d),
+                                              jnp.float32) * 0.02
+    fam = cfg.family
+    nl = cfg.num_layers
+    if fam in ("dense", "vlm", "moe"):
+        lk = jax.random.split(keys[2], nl)
+        params["layers"] = jax.vmap(partial(_init_attn_block, cfg=cfg))(lk)
+    elif fam == "ssm":
+        g, per = _xlstm_groups(cfg)
+        mk = jax.random.split(keys[2], g * (per - 1)).reshape(g, per - 1, 2)
+        sk = jax.random.split(keys[3], g)
+        params["mlstm_layers"] = jax.vmap(jax.vmap(
+            partial(_init_mlstm_block, cfg=cfg)))(mk)
+        params["slstm_layers"] = jax.vmap(
+            partial(_init_slstm_block, cfg=cfg))(sk)
+    elif fam == "hybrid":
+        g, per = _zamba_groups(cfg)
+        mk = jax.random.split(keys[2], g * per).reshape(g, per, 2)
+        params["mamba_layers"] = jax.vmap(jax.vmap(
+            partial(_init_mamba_block, cfg=cfg)))(mk)
+        params["shared_attn"] = _init_attn_block(keys[3], cfg)
+    elif fam == "audio":
+        ek = jax.random.split(keys[2], cfg.encoder_layers)
+        dk = jax.random.split(keys[3], nl)
+        params["encoder_layers"] = jax.vmap(
+            partial(_init_encoder_block, cfg=cfg))(ek)
+        params["enc_final_norm"] = jnp.zeros((d,), jnp.float32)
+        params["layers"] = jax.vmap(
+            partial(_init_decoder_block_xattn, cfg=cfg))(dk)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(init_params, cfg=cfg), key)
+
+
+def param_shardings(cfg: ModelConfig) -> PyTree:
+    """PartitionSpec pytree matching ``init_params`` structure."""
+    ap = abstract_params(cfg)
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        return SH.param_partition(name, leaf.shape, strategy=cfg.strategy)
+
+    return jax.tree_util.tree_map_with_path(spec, ap)
+
+
+def _seq_axis(cfg: ModelConfig):
+    """fsdp: keep the residual stream sequence-sharded over the model axis
+    (Megatron-SP style) so per-layer activation all-reduces disappear."""
+    return SH.MODEL_AXIS if cfg.strategy == "fsdp" else None
+
+
+def _xlstm_groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.slstm_every or cfg.num_layers
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per
+
+
+def _zamba_groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.attn_every or cfg.num_layers
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per
+
+
+# ==========================================================================
+# blocks (shared by train/prefill)
+# ==========================================================================
+
+def _attn_block(p, cfg: ModelConfig, x, positions, window):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = L.attention_fwd(p["attn"], cfg, h, positions, window)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        h = L.moe_fwd(p["moe"], cfg, h)
+    else:
+        h = L.mlp_fwd(p["mlp"], h, fsdp=cfg.strategy == "fsdp")
+    x = x + h
+    return SH.shard(x, SH.BATCH_AXES, _seq_axis(cfg), None)
+
+
+def _window_schedule(cfg: ModelConfig, s: int) -> jax.Array:
+    if cfg.alt_local_global:
+        wins = [cfg.sliding_window if k == "local" else BIG_WINDOW
+                for k in cfg.layer_kinds()]
+    elif cfg.sliding_window:
+        wins = [cfg.sliding_window] * cfg.num_layers
+    else:
+        wins = [BIG_WINDOW] * cfg.num_layers
+    return jnp.asarray(wins, jnp.int32)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ==========================================================================
+# forward (train)
+# ==========================================================================
+
+def forward_train(params, cfg: ModelConfig, tokens: jax.Array,
+                  enc_features: jax.Array | None = None) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V)."""
+    b, s = tokens.shape
+    cdt = _cdt(cfg)
+    x = params["embed"].astype(cdt)[tokens] * math.sqrt(cfg.d_model)
+    x = SH.shard(x, SH.BATCH_AXES, _seq_axis(cfg), None)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        windows = _window_schedule(cfg, s)
+
+        def body(x, xs):
+            lp, w = xs
+            return _maybe_remat(
+                lambda xx: _attn_block(lp, cfg, xx, positions, w), cfg)(x), ()
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+
+    elif fam == "ssm":
+        def group(x, xs):
+            mls, sls = xs
+
+            def mbody(x, lp):
+                def blk(xx):
+                    h = L.rms_norm(xx, lp["ln1"], cfg.norm_eps)
+                    h, _ = L.mlstm_fwd(lp["mlstm"], cfg, h)
+                    return xx + h
+                return _maybe_remat(blk, cfg)(x), ()
+
+            x, _ = jax.lax.scan(mbody, x, mls)
+
+            def sblk(xx):
+                h = L.rms_norm(xx, sls["ln1"], cfg.norm_eps)
+                h, _ = L.slstm_fwd(sls["slstm"], cfg, h)
+                return xx + h
+            return _maybe_remat(sblk, cfg)(x), ()
+
+        x, _ = jax.lax.scan(
+            group, x, (params["mlstm_layers"], params["slstm_layers"]))
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, mls):
+            def mbody(x, lp):
+                def blk(xx):
+                    h = L.rms_norm(xx, lp["ln1"], cfg.norm_eps)
+                    h, _, _ = L.mamba_fwd(lp["mamba"], cfg, h)
+                    return xx + h
+                return _maybe_remat(blk, cfg)(x), ()
+
+            x, _ = jax.lax.scan(mbody, x, mls)
+            x = _maybe_remat(
+                lambda xx: _attn_block(shared, cfg, xx, positions,
+                                       BIG_WINDOW), cfg)(x)
+            return x, ()
+
+        x, _ = jax.lax.scan(group, x, params["mamba_layers"])
+
+    elif fam == "audio":
+        enc = encode_audio(params, cfg, b, cdt, enc_features)
+        windows = _window_schedule(cfg, s)
+
+        def body(x, xs):
+            lp, w = xs
+
+            def blk(xx):
+                xx = _attn_block_pre(lp, cfg, xx, positions, w)
+                h = L.rms_norm(xx, lp["ln_x"], cfg.norm_eps)
+                h = _cross_attention(lp["xattn"], cfg, h, enc)
+                xx = xx + h
+                return _mlp_post(lp, cfg, xx)
+            return _maybe_remat(blk, cfg)(x), ()
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cdt))
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padded vocab columns out of the softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    if cfg.strategy == "fsdp":
+        return SH.shard(logits, SH.BATCH_AXES, SH.MODEL_AXIS, None)
+    return SH.shard(logits, SH.BATCH_AXES, None, SH.MODEL_AXIS)
+
+
+def _attn_block_pre(p, cfg, x, positions, window):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = L.attention_fwd(p["attn"], cfg, h, positions, window)
+    return x + h
+
+
+def _mlp_post(p, cfg, x):
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    h = L.moe_fwd(p["moe"], cfg, h) if cfg.is_moe else L.mlp_fwd(
+        p["mlp"], h, fsdp=cfg.strategy == "fsdp")
+    return x + h
+
+
+def _cross_attention(p, cfg: ModelConfig, x, enc):
+    b, s, d = x.shape
+    te = enc.shape[1]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (enc @ p["wk"].astype(x.dtype)).reshape(b, te, kh, hd)
+    v = (enc @ p["wv"].astype(x.dtype)).reshape(b, te, kh, hd)
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    kpos = jnp.arange(te, dtype=jnp.int32)
+    out = L.flash_attention(q, k, v, qpos, kpos, BIG_WINDOW, 0.0,
+                            causal=False)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def encode_audio(params, cfg: ModelConfig, b: int, cdt,
+                 enc_features: jax.Array | None = None) -> jax.Array:
+    """Whisper encoder.  The conv frontend is a stub: ``enc_features`` are
+    precomputed frame embeddings (B, T_enc, d) from input_specs()."""
+    te = cfg.encoder_seq
+    if enc_features is None:
+        enc_features = jnp.zeros((b, te, cfg.d_model), cdt)
+    x = enc_features.astype(cdt)
+    positions = jnp.arange(te, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    def body(x, lp):
+        def blk(xx):
+            h = L.rms_norm(xx, lp["ln1"], cfg.norm_eps)
+            q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+            o = L.flash_attention(q, k, v, positions[0], positions[0],
+                                  BIG_WINDOW, 0.0, causal=False)
+            o = o.reshape(xx.shape[0], te, cfg.num_heads * cfg.hd)
+            xx = xx + o @ lp["attn"]["wo"].astype(xx.dtype)
+            h = L.rms_norm(xx, lp["ln2"], cfg.norm_eps)
+            return xx + L.mlp_fwd(lp["mlp"], h)
+        return _maybe_remat(blk, cfg)(x), ()
+
+    x, _ = jax.lax.scan(body, x, params["encoder_layers"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+# ==========================================================================
+# loss / train step
+# ==========================================================================
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    logits = forward_train(params, cfg, batch["tokens"],
+                           enc_features=batch.get("enc_features"))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ==========================================================================
+# caches + serving
+# ==========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int,
+               abstract: bool = False) -> PyTree:
+    cdt = _cdt(cfg)
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda sh, dt: jnp.zeros(sh, dt))
+    kh, hd = cfg.num_kv_heads, cfg.hd
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {
+            "k": mk((cfg.num_layers, batch, smax, kh, hd), cdt),
+            "v": mk((cfg.num_layers, batch, smax, kh, hd), cdt),
+        }
+    if fam == "ssm":
+        g, per = _xlstm_groups(cfg)
+        hm, pd = cfg.d_inner // cfg.ssm_head_dim, cfg.ssm_head_dim
+        return {
+            "mlstm": mk((g, per - 1, batch, hm, pd, pd), jnp.float32),
+            "slstm": mk((g, batch, cfg.d_model, 2), jnp.float32),
+        }
+    if fam == "hybrid":
+        g, per = _zamba_groups(cfg)
+        return {
+            "ssm": mk((g, per, batch, cfg.ssm_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32),
+            "conv": mk((g, per, batch, cfg.ssm_conv - 1,
+                        cfg.d_inner + 2 * cfg.ssm_state), cdt),
+            "k": mk((g, batch, smax, kh, hd), cdt),
+            "v": mk((g, batch, smax, kh, hd), cdt),
+        }
+    if fam == "audio":
+        return {
+            "k": mk((cfg.num_layers, batch, smax, kh, hd), cdt),
+            "v": mk((cfg.num_layers, batch, smax, kh, hd), cdt),
+            "enc": mk((batch, cfg.encoder_seq, cfg.d_model), cdt),
+        }
+    raise ValueError(fam)
+
+
+def serve_step(params, cfg: ModelConfig, cache: PyTree, token: jax.Array,
+               pos: jax.Array):
+    """One decode step: token (B, 1) int32, pos scalar int32."""
+    b = token.shape[0]
+    cdt = _cdt(cfg)
+    x = params["embed"].astype(cdt)[token] * math.sqrt(cfg.d_model)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, xs):
+            lp, ck, cv = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            h, ck, cv = L.decode_attention(lp["attn"], cfg, h, ck, cv, pos)
+            x = x + h
+            x = _mlp_post(lp, cfg, x)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ck, cv
+
+    elif fam == "ssm":
+        def group(x, xs):
+            mls, sls, mst, sst = xs
+
+            def mbody(x, xs2):
+                lp, st = xs2
+                h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+                h, st = L.mlstm_fwd(lp["mlstm"], cfg, h, state=st,
+                                    single_step=True)
+                return x + h, st
+
+            x, mst = jax.lax.scan(mbody, x, (mls, mst))
+            h = L.rms_norm(x, sls["ln1"], cfg.norm_eps)
+            h, sst = L.slstm_fwd(sls["slstm"], cfg, h, state=sst,
+                                 single_step=True)
+            return x + h, (mst, sst)
+
+        x, (mst, sst) = jax.lax.scan(
+            group, x, (params["mlstm_layers"], params["slstm_layers"],
+                       cache["mlstm"], cache["slstm"]))
+        new_cache["mlstm"], new_cache["slstm"] = mst, sst
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, xs):
+            mls, sst, cst, ck, cv = xs
+
+            def mbody(x, xs2):
+                lp, st, cs = xs2
+                h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+                h, st, cs = L.mamba_fwd(lp["mamba"], cfg, h, state=st,
+                                        conv_state=cs, single_step=True)
+                return x + h, (st, cs)
+
+            x, (sst, cst) = jax.lax.scan(mbody, x, (mls, sst, cst))
+            h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+            h, ck, cv = L.decode_attention(shared["attn"], cfg, h, ck, cv,
+                                           pos)
+            x = x + h
+            x = _mlp_post(shared, cfg, x)
+            return x, (sst, cst, ck, cv)
+
+        x, (sst, cst, ck, cv) = jax.lax.scan(
+            group, x, (params["mamba_layers"], cache["ssm"], cache["conv"],
+                       cache["k"], cache["v"]))
+        new_cache.update(ssm=sst, conv=cst, k=ck, v=cv)
+
+    elif fam == "audio":
+        enc = cache["enc"]
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            h, ck, cv = L.decode_attention(lp["attn"], cfg, h, ck, cv, pos)
+            x = x + h
+            h = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+            x = x + _cross_attention(lp["xattn"], cfg, h, enc)
+            x = _mlp_post(lp, cfg, x)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ck, cv
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(cdt))
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    logits = logits[..., :cfg.vocab_size]
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            enc_features: jax.Array | None = None):
+    """Process a full prompt; returns last-token logits.  (The KV cache for
+    subsequent decode is produced by running ``serve_step`` from the cache
+    layout — prefill here is the compute-shape that matters for roofline.)"""
+    logits = forward_train(params, cfg, tokens, enc_features=enc_features)
+    return logits[:, -1:, :]

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWConfig, init_opt_state, adamw_update, cosine_schedule,
+    clip_by_global_norm, abstract_opt_state, opt_state_shardings,
+)

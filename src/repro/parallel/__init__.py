@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    set_mesh, get_mesh, shard, axis_size, param_partition, zero1_spec,
+)

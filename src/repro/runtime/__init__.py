@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    resilient_loop, StragglerMonitor, LoopReport,
+)
+from repro.runtime.compression import (  # noqa: F401
+    compressed_psum, compress_update, tree_compress_update, init_error_state,
+    quantize_int8, dequantize_int8,
+)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run sets its own XLA_FLAGS in a
+# subprocess).  Keep threads low: the container has one core.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

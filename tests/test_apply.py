@@ -1,0 +1,75 @@
+"""Dense-vs-planar gate application equivalence (oracle tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply as A
+from repro.core import gates as G
+from repro.core import statevec as SV
+from repro.core.target import CPU_TEST
+
+
+def _apply_both(n, qubits, controls, seed):
+    rng = np.random.default_rng(seed)
+    u = G.random_unitary(1 << len(qubits), rng)
+    st_ = SV.random_state(n, CPU_TEST, seed=seed)
+    psi = st_.to_dense()
+    dense = A.apply_gate_dense(psi, n, tuple(qubits), jnp.asarray(u),
+                               tuple(controls))
+    ur, ui = (jnp.asarray(u.real, jnp.float32),
+              jnp.asarray(u.imag, jnp.float32))
+    planar = A.apply_gate_planar(st_.data, n, tuple(qubits), ur, ui,
+                                 tuple(controls))
+    out = SV.State(planar, n, st_.v).to_dense()
+    return np.asarray(dense), np.asarray(out)
+
+
+@pytest.mark.parametrize("n,qubits,controls", [
+    (5, (0,), ()),
+    (5, (4,), ()),
+    (6, (2, 4), ()),
+    (6, (5, 0), ()),
+    (7, (1, 3, 6), ()),
+    (6, (3,), (5,)),
+    (6, (0,), (4, 2)),
+    (7, (2, 6), (0,)),
+])
+def test_dense_vs_planar(n, qubits, controls):
+    d, p = _apply_both(n, qubits, controls, seed=42)
+    np.testing.assert_allclose(d, p, atol=2e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_dense_vs_planar_property(data):
+    n = data.draw(st.integers(4, 8))
+    k = data.draw(st.integers(1, min(3, n - 1)))
+    qubits = tuple(data.draw(
+        st.permutations(range(n)).map(lambda p: p[:k])))
+    rest = [q for q in range(n) if q not in qubits]
+    nc = data.draw(st.integers(0, min(2, len(rest))))
+    controls = tuple(rest[:nc])
+    seed = data.draw(st.integers(0, 10_000))
+    d, p = _apply_both(n, qubits, controls, seed)
+    np.testing.assert_allclose(d, p, atol=3e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 8), q=st.integers(0, 7), seed=st.integers(0, 999))
+def test_norm_preserved(n, q, seed):
+    if q >= n:
+        return
+    rng = np.random.default_rng(seed)
+    u = G.random_unitary(2, rng)
+    st_ = SV.random_state(n, CPU_TEST, seed=seed)
+    ur, ui = (jnp.asarray(u.real, jnp.float32),
+              jnp.asarray(u.imag, jnp.float32))
+    out = A.apply_gate_planar(st_.data, n, (q,), ur, ui)
+    norm = float(jnp.sum(out.astype(jnp.float64) ** 2))
+    assert abs(norm - 1.0) < 1e-5
+
+
+def test_split_row_lane():
+    lane, row = A.split_row_lane((0, 3, 5, 7), v=4)
+    assert lane == [0, 3] and row == [5, 7]

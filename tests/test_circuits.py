@@ -1,0 +1,79 @@
+"""Benchmark-circuit construction + analytic final states (Cirq stand-in)."""
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core import gates as G
+from repro.core.simulator import Simulator
+from repro.core.target import CPU_TEST
+
+
+def test_ghz_state():
+    st = Simulator(CPU_TEST, backend="planar").run(C.ghz(8))
+    np.testing.assert_allclose(np.asarray(st.to_dense()),
+                               C.expected_ghz_dense(8), atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [4, 6, 8])
+def test_qft_of_zero_state(n):
+    st = Simulator(CPU_TEST, backend="planar").run(C.qft(n))
+    np.testing.assert_allclose(np.asarray(st.to_dense()),
+                               C.expected_qft_dense(n), atol=1e-5)
+
+
+def test_qft_gate_count():
+    # H per qubit + n(n-1)/2 controlled phases + floor(n/2) swaps
+    n = 9
+    circ = C.qft(n)
+    assert circ.num_gates == n + n * (n - 1) // 2 + n // 2
+
+
+def test_ghz_gate_count_linear():
+    # paper Table III: GHZ touches each qubit O(1) times
+    for n in (5, 9, 13):
+        assert C.ghz(n).num_gates == n
+
+
+def test_grover_amplifies_marked_state():
+    n = 6
+    marked = 13
+    circ = C.grover(n, marked=marked, iterations=2)
+    st = Simulator(CPU_TEST, backend="planar").run(circ)
+    probs = np.abs(np.asarray(st.to_dense())) ** 2
+    assert probs.argmax() == marked
+    assert probs[marked] > 10 * (1 - probs[marked]) / (2 ** n - 1)
+
+
+def test_qrc_structure():
+    circ = C.qrc(6, depth=8, seed=1)
+    # depth layers of n rotations + staggered CZ
+    rot_count = sum(1 for g in circ.gates if g.name in ("rx", "ry", "rz"))
+    assert rot_count == 8 * 6
+    assert circ.n == 6
+
+
+def test_qv_square():
+    circ = C.qv(6)
+    su4s = [g for g in circ.gates if g.name == "su4"]
+    assert len(su4s) == 6 * 3            # depth n, floor(n/2) pairs each
+
+
+def test_synthetic_high_qubits_only():
+    circ = C.synthetic(10, layers=3, num_vals=8)
+    assert all(q >= 3 for g in circ.gates for q in g.qubits)
+    assert circ.num_gates == 3 * (10 - 3)
+
+
+def test_gate_ops_on_qubit_table3():
+    """Table III sanity: GHZ gate ops per qubit is 1 (H or CNOT chain) or
+    2 for chain-interior qubits (control+target)."""
+    circ = C.ghz(8)
+    ops = [circ.gate_ops_on_qubit(q) for q in range(8)]
+    assert ops[0] == 2 and ops[-1] == 1 and all(o == 2 for o in ops[1:-1])
+
+
+def test_determinism():
+    a = C.qrc(5, depth=4, seed=9)
+    b = C.qrc(5, depth=4, seed=9)
+    for ga, gb in zip(a.gates, b.gates):
+        np.testing.assert_array_equal(ga.matrix, gb.matrix)

@@ -1,0 +1,105 @@
+"""Gate-fusion tests: semantics preservation + the paper's AI model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circuits as C
+from repro.core import gates as G
+from repro.core.fusion import (ai_paper, ai_stream, choose_f, fuse_circuit,
+                               fusion_stats)
+from repro.core.simulator import Simulator
+from repro.core.target import (ARM_A64FX, ARM_GRACE, ARM_GRAVITON3, CPU_TEST,
+                               TPU_V5E, TPU_V5P)
+
+
+def _final_state(gates, n, backend="dense"):
+    sim = Simulator(CPU_TEST, backend=backend, fuse=False)
+    circ = C.Circuit(n, list(gates))
+    return np.asarray(sim.run(circ).to_dense())
+
+
+@pytest.mark.parametrize("name,n,kw", [
+    ("qft", 7, {}),
+    ("ghz", 7, {}),
+    ("grover", 6, {}),
+    ("qrc", 6, {"depth": 4}),
+    ("qv", 6, {}),
+])
+@pytest.mark.parametrize("f", [2, 3, 4])
+def test_fusion_preserves_semantics(name, n, kw, f):
+    circ = C.build(name, n, **kw)
+    fused = fuse_circuit(circ.gates, f)
+    ref = _final_state(circ.gates, n)
+    out = _final_state(fused, n)
+    np.testing.assert_allclose(out, ref, atol=5e-6)
+    assert all(g.k + len(g.controls) <= max(f, 2) or g.controls
+               for g in fused)
+
+
+def test_fusion_reduces_gate_count():
+    circ = C.qft(10)
+    fused = fuse_circuit(circ.gates, 4)
+    stats = fusion_stats(circ.gates, fused)
+    assert stats["gates_after"] < stats["gates_before"] / 2
+    assert stats["max_fused_qubits"] <= 4
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), f=st.integers(2, 5))
+def test_fusion_random_circuits(seed, f):
+    rng = np.random.default_rng(seed)
+    n = 6
+    gates = []
+    for _ in range(20):
+        kind = rng.integers(0, 4)
+        q = int(rng.integers(0, n))
+        if kind == 0:
+            gates.append(G.rx(q, float(rng.uniform(0, 6))))
+        elif kind == 1:
+            gates.append(G.h(q))
+        elif kind == 2:
+            q2 = int((q + 1 + rng.integers(0, n - 1)) % n)
+            gates.append(G.cz(q, q2))
+        else:
+            q2 = int((q + 1 + rng.integers(0, n - 1)) % n)
+            gates.append(G.su4(q, q2, rng))
+    fused = fuse_circuit(gates, f)
+    np.testing.assert_allclose(_final_state(fused, n),
+                               _final_state(gates, n), atol=5e-6)
+
+
+def test_vertical_fusion_same_qubits():
+    gates = [G.h(2), G.x(2), G.z(2)]
+    fused = fuse_circuit(gates, 2)
+    assert len(fused) == 1
+    expected = G.Z_M @ G.X_M @ G.H_M
+    np.testing.assert_allclose(fused[0].matrix, expected, atol=1e-6)
+
+
+def test_ai_model_increases_with_f():
+    ais = [ai_stream(f) for f in range(1, 8)]
+    assert all(b > a for a, b in zip(ais, ais[1:]))
+    # paper §IV-D quotes AI ~ 1.93 at f=3 and ~0.43 unfused, at numVals=4
+    assert ai_paper(3, 4) == pytest.approx(1.93, abs=0.05)
+    assert ai_paper(1, 4) == pytest.approx(0.43, abs=0.02)
+
+
+def test_choose_f_reproduces_paper_optima():
+    """Fig 10 of the paper: best f = 4 (Grace, 72 threads), 3 (Graviton),
+    3 (A64FX).  The machine-balance rule must land on the same values."""
+    assert choose_f(ARM_GRACE) == 4
+    assert choose_f(ARM_GRAVITON3) == 3
+    assert choose_f(ARM_A64FX) == 3
+
+
+def test_choose_f_tpu_targets_mxu_shape():
+    """On TPU the balance point pushes f to 6-7: a 64x64..128x128 fused
+    unitary — the MXU-native tile (DESIGN.md beyond-paper lever)."""
+    assert choose_f(TPU_V5E) >= 6
+    assert choose_f(TPU_V5P) >= 6
+
+
+def test_controlled_gates_fuse_vertically():
+    gates = [G.cphase(0, 4, 0.3), G.cphase(0, 4, 0.5)]
+    fused = fuse_circuit(gates, 2, expand_controls_up_to=0)
+    assert len(fused) == 1 and fused[0].controls == (0,)

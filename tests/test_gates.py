@@ -1,0 +1,91 @@
+"""Gate library unit tests + unitarity properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gates as G
+
+
+ALL_1Q = [G.h, G.x, G.y, G.z, G.s, G.t]
+
+
+@pytest.mark.parametrize("ctor", ALL_1Q)
+def test_1q_unitary(ctor):
+    g = ctor(0)
+    m = g.matrix
+    np.testing.assert_allclose(m @ m.conj().T, np.eye(2), atol=1e-6)
+
+
+@pytest.mark.parametrize("theta", [0.0, 0.3, np.pi / 2, np.pi, 5.0])
+@pytest.mark.parametrize("rot", [G.rx, G.ry, G.rz])
+def test_rotations_unitary(rot, theta):
+    m = rot(0, theta).matrix
+    np.testing.assert_allclose(m @ m.conj().T, np.eye(2), atol=1e-6)
+
+
+def test_h_squared_identity():
+    np.testing.assert_allclose(G.H_M @ G.H_M, np.eye(2), atol=1e-6)
+
+
+def test_swap_and_fsim():
+    np.testing.assert_allclose(G.swap_m() @ G.swap_m(), np.eye(4), atol=1e-6)
+    m = G.fsim_m(0.3, 0.7)
+    np.testing.assert_allclose(m @ m.conj().T, np.eye(4), atol=1e-6)
+    # fsim(0, 0) == identity
+    np.testing.assert_allclose(G.fsim_m(0, 0), np.eye(4), atol=1e-6)
+
+
+def test_random_unitary_is_unitary(rng):
+    for dim in (2, 4, 8, 16):
+        u = G.random_unitary(dim, rng)
+        np.testing.assert_allclose(u @ u.conj().T, np.eye(dim), atol=1e-5)
+
+
+def test_gate_validation():
+    with pytest.raises(ValueError):
+        G.Gate((0, 1), G.X_M)           # wrong matrix size
+    with pytest.raises(ValueError):
+        G.Gate((0,), G.X_M, controls=(0,))  # overlap
+    with pytest.raises(ValueError):
+        G.Gate((0, 0), G.swap_m())      # duplicate
+
+
+def test_expand_unitary_identity_padding(rng):
+    u = G.random_unitary(2, rng)
+    full = G.expand_unitary([1], u, [0, 1])
+    # acting on qubit 1 within (q0, q1): kron(u, I) in little-endian
+    expected = np.kron(u, np.eye(2))
+    np.testing.assert_allclose(full, expected, atol=1e-6)
+
+
+def test_expand_unitary_permutation(rng):
+    u = G.random_unitary(4, rng)
+    # expanding onto the same qubits in swapped order permutes basis
+    swapped = G.expand_unitary([1, 0], u, [0, 1])
+    perm = [0, 2, 1, 3]  # bit swap of 2-bit indices
+    np.testing.assert_allclose(swapped, u[np.ix_(perm, perm)], atol=1e-6)
+
+
+def test_controlled_to_full_cnot():
+    qs, m = G.controlled_to_full(G.cnot(1, 0))
+    assert qs == (0, 1)
+    expected = np.eye(4, dtype=np.complex64)
+    expected[[2, 3]] = expected[[3, 2]]
+    np.testing.assert_allclose(m, expected, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(1, 3), seed=st.integers(0, 10_000))
+def test_expand_unitary_stays_unitary(k, seed):
+    rng = np.random.default_rng(seed)
+    u = G.random_unitary(1 << k, rng)
+    full_qubits = list(range(k + 2))
+    sub = list(rng.permutation(full_qubits)[:k])
+    big = G.expand_unitary(sub, u, full_qubits)
+    np.testing.assert_allclose(big @ big.conj().T, np.eye(1 << (k + 2)),
+                               atol=1e-5)
+
+
+def test_gate_flops_matches_paper():
+    # paper: 1-qubit gate kernel = 28 flops per group
+    assert G.h(0).flops() == 28

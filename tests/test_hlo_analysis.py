@@ -1,0 +1,84 @@
+"""HLO parser tests: scan-corrected FLOPs + collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_plain_matmul_flops():
+    m, k, n = 64, 128, 32
+    f = jax.jit(lambda a, b: a @ b)
+    co = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    stats = analyze_hlo(co.as_text())
+    assert stats.flops == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_scan_trip_count_correction():
+    """A scanned matmul must count num_layers x the body FLOPs — the exact
+    failure mode of raw cost_analysis()."""
+    L, d = 7, 64
+
+    def fn(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    co = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((8, d), jnp.float32),
+        jax.ShapeDtypeStruct((L, d, d), jnp.float32)).compile()
+    stats = analyze_hlo(co.as_text())
+    expected = L * 2 * 8 * d * d
+    assert stats.flops == pytest.approx(expected, rel=0.05)
+    # raw cost_analysis counts the body once — document the discrepancy
+    raw = co.cost_analysis()["flops"]
+    assert raw < expected / 2
+
+
+def test_nested_scan_multipliers():
+    Lo, Li, d = 3, 4, 32
+
+    def fn(x, w):
+        def outer(c, wg):
+            def inner(ci, wl):
+                return ci @ wl, ()
+            y, _ = jax.lax.scan(inner, c, wg)
+            return y, ()
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    co = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((4, d), jnp.float32),
+        jax.ShapeDtypeStruct((Lo, Li, d, d), jnp.float32)).compile()
+    stats = analyze_hlo(co.as_text())
+    assert stats.flops == pytest.approx(Lo * Li * 2 * 4 * d * d, rel=0.05)
+
+
+def test_collective_bytes_counted():
+    import subprocess, sys, os, textwrap
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys; sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((4,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            return jax.lax.with_sharding_constraint(
+                jnp.sum(x, axis=0, keepdims=True) + 0.0, NamedSharding(mesh, P()))
+        x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        co = jax.jit(f, in_shardings=NamedSharding(mesh, P("d", None)),
+                     out_shardings=NamedSharding(mesh, P())).lower(x).compile()
+        s = analyze_hlo(co.as_text())
+        assert s.collective_bytes > 0, s.to_dict()
+        print("OK", s.to_dict())
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr

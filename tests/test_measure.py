@@ -1,0 +1,116 @@
+"""Measurement/sampling tests + elastic checkpoint rescale."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circuits as C
+from repro.core import measure as ME
+from repro.core.simulator import Simulator
+from repro.core.statevec import zero_state, random_state
+from repro.core.target import CPU_TEST
+
+
+def test_sample_ghz_bimodal():
+    st_ = Simulator(CPU_TEST, backend="planar").run(C.ghz(8))
+    s = np.asarray(ME.sample(st_, 4000, jax.random.PRNGKey(0)))
+    zeros = np.sum(s == 0)
+    ones = np.sum(s == 255)
+    assert zeros + ones == 4000            # only |0..0> and |1..1>
+    assert 0.4 < zeros / 4000 < 0.6
+
+
+def test_sample_distribution_matches_probs():
+    st_ = random_state(6, CPU_TEST, seed=5)
+    probs = np.asarray(ME.probabilities(st_))
+    s = np.asarray(ME.sample(st_, 20000, jax.random.PRNGKey(1)))
+    emp = np.bincount(s, minlength=64) / 20000
+    assert np.abs(emp - probs).max() < 0.02
+
+
+def test_pauli_z_matches_kernel():
+    from repro.kernels.expectation import expectation_z_ref
+    st_ = random_state(7, CPU_TEST, seed=9)
+    for q in (0, 3, 6):
+        a = float(ME.expectation_pauli(st_, {q: "Z"}))
+        b = float(expectation_z_ref(st_.data, 7, st_.v, q))
+        assert abs(a - b) < 1e-5
+
+
+def test_pauli_x_on_plus_state():
+    # H|0> -> <X> = +1
+    st_ = Simulator(CPU_TEST, backend="planar", fuse=False).run(
+        C.Circuit(4, [__import__("repro.core.gates", fromlist=["h"]).h(2)]))
+    assert abs(float(ME.expectation_pauli(st_, {2: "X"})) - 1.0) < 1e-5
+    assert abs(float(ME.expectation_pauli(st_, {0: "Z"})) - 1.0) < 1e-5
+
+
+def test_ghz_parity_correlation():
+    # GHZ: <Z_i Z_j> = +1 for all pairs, <Z_i> = 0
+    st_ = Simulator(CPU_TEST, backend="planar").run(C.ghz(6))
+    assert abs(float(ME.expectation_pauli(st_, {0: "Z", 5: "Z"})) - 1) < 1e-5
+    assert abs(float(ME.expectation_pauli(st_, {2: "Z"}))) < 1e-5
+    # and the all-X parity is +1 for GHZ with even..: <X^n> = 1
+    xs = {q: "X" for q in range(6)}
+    assert abs(float(ME.expectation_pauli(st_, xs)) - 1.0) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 8), seed=st.integers(0, 500))
+def test_pauli_expectation_bounded(n, seed):
+    st_ = random_state(n, CPU_TEST, seed=seed)
+    rng = np.random.default_rng(seed)
+    q = int(rng.integers(0, n))
+    p = "XYZ"[int(rng.integers(0, 3))]
+    val = float(ME.expectation_pauli(st_, {q: p}))
+    assert -1.0 - 1e-5 <= val <= 1.0 + 1e-5
+
+
+def test_marginal_probs():
+    st_ = Simulator(CPU_TEST, backend="planar").run(C.ghz(6))
+    m = np.asarray(ME.marginal_probs(st_, [0]))
+    np.testing.assert_allclose(m, [0.5, 0.5], atol=1e-5)
+
+
+def test_bitstring_counts():
+    st_ = Simulator(CPU_TEST, backend="planar").run(C.ghz(5))
+    s = ME.sample(st_, 1000, jax.random.PRNGKey(3))
+    top = ME.bitstring_counts(np.asarray(s), 5, top=2)
+    assert {b for b, _ in top} == {"00000", "11111"}
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_rescale():
+    """Save a sharded state on a 4-device mesh, restore onto 2 devices."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = textwrap.dedent(f"""
+        import os, sys, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+        d = tempfile.mkdtemp()
+        mesh4 = jax.make_mesh((4,), ("data",),
+                              axis_types=(jax.sharding.AxisType.Auto,))
+        x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                           NamedSharding(mesh4, P("data", None)))
+        m = CheckpointManager(d)
+        m.save(0, {{"x": x}})
+        # restore onto a 2-device submesh (elastic rescale)
+        mesh2 = jax.sharding.Mesh(np.array(jax.devices()[:2]), ("data",))
+        r = m.restore(0, {{"x": jnp.zeros((8, 8))}},
+                      shardings={{"x": NamedSharding(mesh2, P("data", None))}})
+        np.testing.assert_array_equal(np.asarray(r["x"]), np.asarray(x))
+        assert len(r["x"].sharding.device_set) == 2
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
