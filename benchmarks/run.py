@@ -11,9 +11,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig6_overall, fig10_fusion, fig11_ai, fig12_ablation,
-                        fig13_scaling, fig14_projection, roofline,
-                        tab3_gate_ops, tab4_vectorization)
+from benchmarks import (batch_throughput, fig6_overall, fig10_fusion,
+                        fig11_ai, fig12_ablation, fig13_scaling,
+                        fig14_projection, roofline, tab3_gate_ops,
+                        tab4_vectorization)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -25,6 +26,7 @@ MODULES = {
     "fig13": fig13_scaling,
     "fig14": fig14_projection,
     "roofline": roofline,
+    "batch": batch_throughput,
 }
 
 

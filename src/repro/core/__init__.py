@@ -4,6 +4,10 @@ from repro.core.target import (  # noqa: F401
 )
 from repro.core.statevec import State, zero_state, from_dense, random_state  # noqa: F401
 from repro.core.gates import Gate  # noqa: F401
-from repro.core.circuits import Circuit, build as build_circuit  # noqa: F401
-from repro.core.fusion import fuse_circuit, choose_f  # noqa: F401
+from repro.core.circuits import (  # noqa: F401
+    Circuit, build, build_circuit, qaoa, hardware_efficient,
+)
+from repro.core.fusion import (  # noqa: F401
+    fuse_circuit, choose_f, cluster_gates, realize_cluster, ClusterSpec,
+)
 from repro.core.simulator import Simulator  # noqa: F401

@@ -99,6 +99,50 @@ def qv(n: int, depth: int | None = None, seed: int = 11) -> Circuit:
     return Circuit(n, gs, name=f"qv{n}")
 
 
+def qaoa(n: int, gammas: Sequence[float], betas: Sequence[float],
+         edges: Sequence[tuple[int, int]] | None = None) -> Circuit:
+    """MaxCut QAOA ansatz (default: ring graph), one (gamma, beta) per layer.
+
+    ZZ interactions compile to CNOT · RZ(2*gamma) · CNOT, so every
+    parameter enters through a single-qubit rotation — the form
+    ``repro.engine.template.qaoa_template`` reproduces structurally.
+    """
+    if len(gammas) != len(betas):
+        raise ValueError("need one gamma and one beta per layer")
+    if n < 2:
+        raise ValueError(f"qaoa needs at least 2 qubits, got n={n}")
+    if edges is None:
+        edges = [(i, (i + 1) % n) for i in range(n)] if n > 2 else [(0, 1)]
+    gs: list[G.Gate] = [G.h(q) for q in range(n)]
+    for gamma, beta in zip(gammas, betas):
+        for a, b in edges:
+            gs.append(G.cnot(a, b))
+            gs.append(G.rz(b, 2.0 * float(gamma)))
+            gs.append(G.cnot(a, b))
+        for q in range(n):
+            gs.append(G.rx(q, 2.0 * float(beta)))
+    return Circuit(n, gs, name=f"qaoa{n}p{len(gammas)}")
+
+
+def hardware_efficient(n: int, thetas: Sequence[float]) -> Circuit:
+    """Hardware-efficient ansatz: per layer RY+RZ on every qubit (qubit-major
+    angle order) followed by a linear CNOT entangler.  ``len(thetas)`` must be
+    a multiple of ``2 * n``; the layer count is inferred."""
+    if n > 1 and (len(thetas) == 0 or len(thetas) % (2 * n) != 0):
+        raise ValueError(f"need a multiple of {2 * n} angles, got {len(thetas)}")
+    layers = len(thetas) // (2 * n)
+    gs: list[G.Gate] = []
+    idx = 0
+    for _ in range(layers):
+        for q in range(n):
+            gs.append(G.ry(q, float(thetas[idx])))
+            gs.append(G.rz(q, float(thetas[idx + 1])))
+            idx += 2
+        for q in range(n - 1):
+            gs.append(G.cnot(q, q + 1))
+    return Circuit(n, gs, name=f"hea{n}x{layers}")
+
+
 def synthetic(n: int, layers: int, num_vals: int, seed: int = 3) -> Circuit:
     """Paper §VII-B synthetic tuner: 1-qubit gates on *high* qubits only
     (indices >= log2(numVals)), no controlled gates, so fused-gate count
@@ -120,11 +164,16 @@ BUILDERS = {
     "grover": grover,
     "qrc": qrc,
     "qv": qv,
+    "qaoa": qaoa,
+    "hea": hardware_efficient,
 }
 
 
 def build(name: str, n: int, **kw) -> Circuit:
     return BUILDERS[name](n, **kw)
+
+
+build_circuit = build  # legacy alias (re-exported by repro.core)
 
 
 def expected_ghz_dense(n: int) -> np.ndarray:

@@ -200,7 +200,8 @@ class DistributedSimulator:
             final_perm[:] = perm
             return data
 
-        fn = jax.shard_map(
+        from repro.parallel.sharding import shard_map
+        fn = shard_map(
             local_fn, mesh=self.mesh,
             in_specs=(self.spec,) + (P(),) * len(u_planes),
             out_specs=self.spec)

@@ -64,14 +64,24 @@ def choose_f(target: Target, max_f: int = 7, dtype_bytes: int = 4,
 @dataclasses.dataclass
 class _Cluster:
     qubits: tuple[int, ...]            # sorted
-    members: list[Gate]
+    members: list[int]                 # indices into the preprocessed gate list
     controls: tuple[int, ...] = ()
 
-    def matrix(self) -> np.ndarray:
-        out = np.eye(1 << len(self.qubits), dtype=np.complex64)
-        for g in self.members:
-            out = expand_unitary(g.qubits, g.matrix, self.qubits) @ out
-        return out.astype(np.complex64)
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """One fused-gate cluster, in terms of preprocessed gate indices.
+
+    ``members`` index the list returned alongside by :func:`cluster_gates`,
+    in application order (earliest first).  Consumers that need the fused
+    unitary as a function of gate matrices (e.g. the engine's parameterized
+    plan compiler) re-derive it from the members; :func:`realize_cluster`
+    gives the concrete numpy unitary.
+    """
+
+    qubits: tuple[int, ...]            # sorted union of member targets
+    controls: tuple[int, ...] = ()
+    members: tuple[int, ...] = ()
 
 
 def _normalize(g: Gate) -> Gate:
@@ -111,21 +121,32 @@ def _expand_controls(g: Gate, max_expand: int) -> Gate:
     return Gate(full, out, name=f"x{g.name}")
 
 
-def fuse_circuit(gates: Sequence[Gate], f: int,
-                 expand_controls_up_to: int = 2) -> list[Gate]:
-    """Greedy vertical + horizontal fusion (Qsim-style) with degree ``f``.
+def cluster_gates(gates: Sequence[Gate], f: int,
+                  expand_controls_up_to: int = 2,
+                  ) -> tuple[list[Gate], list[ClusterSpec]]:
+    """Greedy vertical + horizontal clustering (Qsim-style) with degree ``f``.
 
-    Controlled gates whose total span is <= ``expand_controls_up_to`` qubits
-    are expanded into plain unitaries so they participate in fusion (CNOT/CZ/
-    CPhase); larger control sets (e.g. Grover's multi-controlled Z) stay
-    controlled and act as fusion barriers on their qubits.
+    Returns ``(prep, clusters)`` where ``prep`` is the preprocessed gate list
+    (controls absorbed into explicit unitaries when the span fits in
+    ``expand_controls_up_to`` qubits, targets reordered ascending), aligned
+    1:1 with the input, and ``clusters`` reference ``prep`` by index.  This is
+    the reusable structural half of fusion: it depends only on gate *kinds and
+    wiring*, never on matrix values, so one clustering serves every parameter
+    binding of a circuit template.
+
+    Controlled gates whose span exceeds the expansion budget (e.g. Grover's
+    multi-controlled Z) stay controlled and act as fusion barriers on their
+    qubits.
     """
+    prep: list[Gate] = []
     clusters: list[_Cluster] = []
     last_touch: dict[int, int] = {}     # qubit -> cluster index
 
     for g0 in gates:
         g = _expand_controls(g0, expand_controls_up_to)
         g = _normalize(g)
+        prep.append(g)
+        gi = len(prep) - 1
         touched = set(g.qubits) | set(g.controls)
         dep = max((last_touch.get(q, -1) for q in touched), default=-1)
         placed = False
@@ -134,7 +155,7 @@ def fuse_circuit(gates: Sequence[Gate], f: int,
             if (dep >= 0 and clusters[dep].controls == g.controls
                     and clusters[dep].qubits == g.qubits
                     and all(last_touch.get(q, -1) == dep for q in touched)):
-                clusters[dep].members.append(g)
+                clusters[dep].members.append(gi)
                 placed = True
         else:
             # try the dependency cluster first, then the most recent cluster
@@ -153,31 +174,48 @@ def fuse_circuit(gates: Sequence[Gate], f: int,
                 if any(last_touch.get(q, -1) > ci for q in new_qs):
                     continue
                 clusters[ci].qubits = cand
-                clusters[ci].members.append(g)
+                clusters[ci].members.append(gi)
                 for q in touched:
                     last_touch[q] = ci
                 placed = True
                 break
         if not placed:
-            clusters.append(_Cluster(tuple(sorted(g.qubits)), [g],
+            clusters.append(_Cluster(tuple(sorted(g.qubits)), [gi],
                                      controls=g.controls))
             ci = len(clusters) - 1
             for q in touched:
                 last_touch[q] = ci
 
-    fused: list[Gate] = []
-    for c in clusters:
-        if c.controls:
-            g = c.members[0]
-            m = g.matrix
-            for later in c.members[1:]:
-                m = (later.matrix @ m).astype(np.complex64)
-            fused.append(Gate(c.members[0].qubits, m, controls=c.controls,
-                              name=f"fused{len(c.members)}"))
-        else:
-            fused.append(Gate(c.qubits, c.matrix(),
-                              name=f"fused{len(c.members)}"))
-    return fused
+    specs = [ClusterSpec(qubits=c.qubits, controls=c.controls,
+                         members=tuple(c.members)) for c in clusters]
+    return prep, specs
+
+
+def realize_cluster(spec: ClusterSpec, prep: Sequence[Gate]) -> Gate:
+    """Fold a cluster's member matrices into one concrete fused ``Gate``."""
+    members = [prep[i] for i in spec.members]
+    if spec.controls:
+        m = members[0].matrix
+        for later in members[1:]:
+            m = (later.matrix @ m).astype(np.complex64)
+        return Gate(members[0].qubits, m, controls=spec.controls,
+                    name=f"fused{len(members)}")
+    out = np.eye(1 << len(spec.qubits), dtype=np.complex64)
+    for g in members:
+        out = expand_unitary(g.qubits, g.matrix, spec.qubits) @ out
+    return Gate(spec.qubits, out.astype(np.complex64),
+                name=f"fused{len(members)}")
+
+
+def fuse_circuit(gates: Sequence[Gate], f: int,
+                 expand_controls_up_to: int = 2) -> list[Gate]:
+    """Greedy vertical + horizontal fusion with degree ``f``.
+
+    Clustering (:func:`cluster_gates`) decides *which* gates merge; this
+    realizes each cluster into a concrete fused unitary.
+    """
+    prep, specs = cluster_gates(gates, f, expand_controls_up_to)
+    return [realize_cluster(s, prep) for s in specs]
 
 
 def fusion_stats(before: Sequence[Gate], after: Sequence[Gate]) -> dict:

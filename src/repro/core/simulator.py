@@ -15,43 +15,16 @@ adaptation of paper §IV-D.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import apply as A
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.fusion import choose_f, fuse_circuit
 from repro.core.gates import Gate
 from repro.core.target import CPU_TEST, Target
-
-
-@functools.lru_cache(maxsize=512)
-def _jit_dense(n: int, qubits: tuple, controls: tuple):
-    def run(psi, u):
-        return A.apply_gate_dense(psi, n, qubits, u, controls)
-    return jax.jit(run)
-
-
-@functools.lru_cache(maxsize=512)
-def _jit_planar(n: int, qubits: tuple, controls: tuple):
-    def run(data, u_re, u_im):
-        return A.apply_gate_planar(data, n, qubits, u_re, u_im, controls)
-    return jax.jit(run, donate_argnums=(0,))
-
-
-@functools.lru_cache(maxsize=512)
-def _jit_pallas(n: int, v: int, qubits: tuple, controls: tuple,
-                interpret: bool):
-    from repro.kernels.apply_gate import ops as K
-    def run(data, u_re, u_im):
-        return K.apply_fused_gate(data, n, v, qubits, u_re, u_im,
-                                  controls=controls, interpret=interpret)
-    return jax.jit(run, donate_argnums=(0,))
 
 
 @dataclasses.dataclass
@@ -61,10 +34,14 @@ class Simulator:
     f: int | None = None           # horizontal fusion degree; None = auto
     fuse: bool = True
     interpret: bool = True         # Pallas interpret mode (CPU container)
+    plan_cache: object | None = None  # engine.PlanCache; None = shared global
 
     def __post_init__(self):
         if self.f is None:
             self.f = choose_f(self.target) if self.fuse else 0
+        if self.plan_cache is None:
+            from repro.engine.plan import GLOBAL_PLAN_CACHE
+            self.plan_cache = GLOBAL_PLAN_CACHE
 
     # -- preparation ----------------------------------------------------------
     def prepare(self, circuit: Circuit) -> list[Gate]:
@@ -74,32 +51,24 @@ class Simulator:
         f = max(2, min(self.f, circuit.n))
         return fuse_circuit(circuit.gates, f)
 
-    # -- execution ------------------------------------------------------------
-    def run(self, circuit: Circuit,
-            initial: SV.State | None = None) -> SV.State:
-        gates = self.prepare(circuit)
-        if self.backend == "dense":
-            psi = (initial.to_dense() if initial is not None
-                   else jnp.zeros(1 << circuit.n, jnp.complex64).at[0].set(1))
-            for g in gates:
-                fn = _jit_dense(circuit.n, g.qubits, g.controls)
-                psi = fn(psi, jnp.asarray(g.matrix))
-            return SV.from_dense(psi, circuit.n, self.target)
+    def plan_for(self, circuit: Circuit):
+        """Resolve the compiled execution plan for a circuit or template."""
+        if self.backend not in ("dense", "planar", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        return self.plan_cache.get_or_compile(
+            circuit, backend=self.backend, target=self.target, f=self.f,
+            fuse=self.fuse, interpret=self.interpret)
 
-        state = initial if initial is not None else SV.zero_state(
-            circuit.n, self.target)
-        data = state.data
-        for g in gates:
-            u_re, u_im = A.gate_arrays(g)
-            if self.backend == "planar":
-                fn = _jit_planar(circuit.n, g.qubits, g.controls)
-            elif self.backend == "pallas":
-                fn = _jit_pallas(circuit.n, state.v, g.qubits, g.controls,
-                                 self.interpret)
-            else:
-                raise ValueError(f"unknown backend {self.backend!r}")
-            data = fn(data, u_re, u_im)
-        return SV.State(data=data, n=circuit.n, v=state.v)
+    # -- execution ------------------------------------------------------------
+    def run(self, circuit: Circuit, initial: SV.State | None = None,
+            params: Sequence[float] | np.ndarray | None = None) -> SV.State:
+        """Execute one circuit (or one binding of a circuit template).
+
+        Fusion + lowering + jit happen once per circuit *structure* through
+        the plan cache (``repro.engine.plan``); repeat runs of the same
+        structure are single dispatches of the compiled program.
+        """
+        return self.plan_for(circuit).run(params=params, initial=initial)
 
     # -- observables -----------------------------------------------------------
     def expectation_z(self, state: SV.State, qubit: int) -> jax.Array:
@@ -112,8 +81,8 @@ class Simulator:
         return E.expectation_z_ref(state.data, state.n, state.v, qubit)
 
     def probabilities(self, state: SV.State) -> jax.Array:
-        d = state.data.reshape(2, -1)
-        return d[0] * d[0] + d[1] * d[1]
+        """|amplitude|^2 in dense basis order (see ``State.probabilities``)."""
+        return state.probabilities()
 
     def sample(self, state: SV.State, n_samples: int,
                key: jax.Array | None = None) -> jax.Array:

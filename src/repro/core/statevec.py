@@ -48,6 +48,18 @@ class State:
         flat = self.data.reshape(2, 1 << self.n)
         return flat[0].astype(jnp.complex64) + 1j * flat[1].astype(jnp.complex64)
 
+    def probabilities(self) -> jax.Array:
+        """|amplitude|^2 in *dense basis order*, f32[2**n].
+
+        Routed through the same layout inverse as ``to_dense``: the planar
+        tile axes (R, V) flatten to the dense amplitude index ``x = r * V +
+        lane``, so the reshape below is exactly the dense ordering — any
+        future re-tiling of ``data`` must keep this path and ``to_dense`` in
+        lockstep.
+        """
+        flat = self.data.reshape(2, 1 << self.n)
+        return flat[0] * flat[0] + flat[1] * flat[1]
+
     def norm_sq(self) -> jax.Array:
         return jnp.sum(self.data.astype(jnp.float64) ** 2)
 

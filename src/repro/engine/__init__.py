@@ -1,0 +1,19 @@
+"""Batched parameterized-circuit execution engine.
+
+Layered on ``repro.core``: templates split circuits into static structure +
+parameter vector, plans compile each structure once per backend, the batch
+executor vmaps plans over parameter sweeps, and the scheduler batches
+heterogeneous request traffic by plan key.
+"""
+from repro.engine.template import (  # noqa: F401
+    CircuitTemplate, TemplateOp, fixed_op, template_of,
+    qaoa_template, hea_template, PARAM_KINDS,
+)
+from repro.engine.plan import (  # noqa: F401
+    CompiledPlan, PlanCache, PlanItem, CacheStats, compile_plan,
+    GLOBAL_PLAN_CACHE,
+)
+from repro.engine.batch import BatchExecutor  # noqa: F401
+from repro.engine.scheduler import (  # noqa: F401
+    BatchScheduler, Request, SchedulerStats,
+)

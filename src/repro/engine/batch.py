@@ -1,0 +1,79 @@
+"""Batch executor: one compiled plan serving a whole parameter sweep.
+
+``BatchExecutor`` is the engine's execution front end: hand it a
+:class:`CircuitTemplate` plus a ``[B, P]`` parameter matrix and it resolves
+one plan through the cache, then vmaps that plan's program over the batch —
+B structurally identical circuits for the price of one fusion pass and one
+XLA compile.  Shot batches (one circuit, many initial states) go through
+``run_states``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import statevec as SV
+from repro.core.circuits import Circuit
+from repro.core.target import CPU_TEST, Target
+from repro.engine.plan import CacheStats, CompiledPlan, PlanCache
+from repro.engine.template import CircuitTemplate, template_of
+
+
+@dataclasses.dataclass
+class BatchExecutor:
+    """Executes batches of parameter bindings against cached plans."""
+
+    target: Target = CPU_TEST
+    backend: str = "planar"          # dense | planar | pallas
+    f: int | None = None             # fusion degree; None = auto
+    fuse: bool = True
+    interpret: bool = True           # Pallas interpret mode
+    cache: PlanCache | None = None
+
+    def __post_init__(self):
+        if self.cache is None:
+            self.cache = PlanCache()
+
+    # -- plan resolution ------------------------------------------------------
+    def plan_for(self, template: CircuitTemplate | Circuit) -> CompiledPlan:
+        if isinstance(template, Circuit):
+            template = template_of(template)
+        return self.cache.get_or_compile(
+            template, backend=self.backend, target=self.target, f=self.f,
+            fuse=self.fuse, interpret=self.interpret)
+
+    # -- execution ------------------------------------------------------------
+    def run(self, template: CircuitTemplate | Circuit, params=None,
+            initial: SV.State | None = None) -> SV.State:
+        """Single binding — sequential baseline / batch-of-one path."""
+        return self.plan_for(template).run(params=params, initial=initial)
+
+    def run_batch(self, template: CircuitTemplate | Circuit,
+                  params_matrix, initial: SV.State | None = None,
+                  ) -> list[SV.State]:
+        """Run a [B, P] parameter matrix through one compiled plan."""
+        params_matrix = np.atleast_2d(np.asarray(params_matrix, np.float32))
+        return self.plan_for(template).run_batch(params_matrix,
+                                                 initial=initial)
+
+    def run_states(self, template: CircuitTemplate | Circuit,
+                   initials: Sequence[SV.State], params=None,
+                   ) -> list[SV.State]:
+        """Shot-batch path: one circuit over B initial states."""
+        plan = self.plan_for(template)
+        if plan.backend == "dense":
+            data0 = jnp.stack([s.to_dense() for s in initials])
+        else:
+            data0 = jnp.stack([s.data for s in initials])
+        pm = jnp.broadcast_to(plan._params_array(params),
+                              (len(initials), plan.num_params))
+        out = plan.run_batch_raw(pm, initial_batch=data0)
+        return [plan._wrap(out[b]) for b in range(out.shape[0])]
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def stats(self) -> CacheStats:
+        return self.cache.stats

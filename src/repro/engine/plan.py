@@ -1,0 +1,383 @@
+"""Plan compiler + cache: one fused, jitted program per circuit structure.
+
+``compile_plan`` runs fusion clustering once per :class:`CircuitTemplate`
+structure and lowers the fused gate sequence into a *single* jitted program
+``(state, params) -> state`` for the chosen backend (dense / planar /
+pallas).  Parameterized rotations are spliced into their fused clusters as
+traced matrices — constant member gates are folded into numpy constants at
+compile time, so the per-binding work inside the program is a handful of
+2x2-sized complex products before each fused gate application.
+
+``PlanCache`` memoizes compiled plans by structure hash and execution config,
+replacing the per-gate ``_jit_*`` lru_caches the simulator used to keep:
+a parameter sweep of B structurally identical circuits costs one fusion pass
+and one XLA compile instead of B of each.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply as A
+from repro.core import statevec as SV
+from repro.core.circuits import Circuit
+from repro.core.fusion import choose_f, cluster_gates, realize_cluster
+from repro.core.gates import Gate, expand_unitary
+from repro.core.target import Target
+from repro.engine.template import PARAM_KINDS, CircuitTemplate, TemplateOp
+
+
+@functools.lru_cache(maxsize=4096)
+def _embed_maps(sub_qubits: tuple[int, ...], full_qubits: tuple[int, ...],
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static gather maps embedding a small unitary into a cluster space.
+
+    For ``u`` on ``sub_qubits`` inside ``full_qubits`` the expanded matrix is
+    ``where(mask, u[sr, sc], 0)`` — i.e. ``expand_unitary`` as one traced
+    gather, usable on jit/vmap-traced matrices.
+    """
+    pos = {q: i for i, q in enumerate(full_qubits)}
+    sub_pos = np.array([pos[q] for q in sub_qubits], np.int64)
+    rest_pos = np.array([i for i in range(len(full_qubits))
+                         if i not in set(sub_pos.tolist())], np.int64)
+    idx = np.arange(1 << len(full_qubits), dtype=np.int64)
+
+    def gather_bits(positions):
+        out = np.zeros_like(idx)
+        for bi, p in enumerate(positions):
+            out |= ((idx >> p) & 1) << bi
+        return out
+
+    sub = gather_bits(sub_pos)
+    rest = gather_bits(rest_pos)
+    mask = rest[:, None] == rest[None, :]
+    sr = np.broadcast_to(sub[:, None], mask.shape)
+    sc = np.broadcast_to(sub[None, :], mask.shape)
+    return mask, sr, sc
+
+
+def _param_matrix(op: TemplateOp, params) -> jax.Array:
+    return PARAM_KINDS[op.kind].jax_fn(op.scale * params[op.param])
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanItem:
+    """One fused gate application inside the compiled program."""
+
+    qubits: tuple[int, ...]
+    controls: tuple[int, ...]
+    factors: tuple                  # ("const", ndarray) | ("param", op, maps)
+
+    @property
+    def is_constant(self) -> bool:
+        return all(f[0] == "const" for f in self.factors)
+
+    def unitary(self, params) -> jax.Array:
+        """Fused complex64 unitary for one parameter vector (traceable)."""
+        u = None
+        for f in self.factors:
+            if f[0] == "const":
+                e = jnp.asarray(f[1])
+            else:
+                _, op, (mask, sr, sc) = f
+                m2 = _param_matrix(op, params)
+                e = jnp.where(jnp.asarray(mask), m2[(sr, sc)],
+                              jnp.zeros((), jnp.complex64))
+            u = e if u is None else e @ u
+        return u.astype(jnp.complex64)
+
+
+def _lower_cluster(spec, prep: Sequence[Gate],
+                   ops: Sequence[TemplateOp]) -> PlanItem:
+    """Fold a cluster into constant factors with param gates spliced in."""
+    if spec.controls:
+        # controlled clusters never contain parameterized members (param ops
+        # are control-free, so clustering keeps them out) — fold in numpy.
+        for i in spec.members:
+            if ops[i].kind != "fixed":
+                raise AssertionError("parameterized op in controlled cluster")
+        g = realize_cluster(spec, prep)
+        return PlanItem(g.qubits, g.controls, (("const", g.matrix),))
+
+    factors: list = []
+    acc: np.ndarray | None = None
+    for i in spec.members:
+        op = ops[i]
+        g = prep[i]
+        if op.kind == "fixed":
+            e = expand_unitary(g.qubits, g.matrix, spec.qubits)
+            acc = e if acc is None else (e @ acc).astype(np.complex64)
+        else:
+            if acc is not None:
+                factors.append(("const", acc))
+                acc = None
+            factors.append(
+                ("param", op, _embed_maps(op.qubits, spec.qubits)))
+    if acc is not None or not factors:
+        factors.append(("const", acc if acc is not None
+                        else np.eye(1 << len(spec.qubits), dtype=np.complex64)))
+    return PlanItem(spec.qubits, (), tuple(factors))
+
+
+def _lower_single(op: TemplateOp, g: Gate) -> PlanItem:
+    """Lower one unfused gate (dense baseline / fuse=False paths)."""
+    if op.kind == "fixed":
+        return PlanItem(g.qubits, g.controls, (("const", g.matrix),))
+    k = len(op.qubits)
+    ident = tuple(range(k))
+    return PlanItem(op.qubits, op.controls,
+                    (("param", op, _embed_maps(ident, ident)),))
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A fused, jitted execution program for one template structure."""
+
+    template: CircuitTemplate
+    backend: str
+    target: Target
+    f: int
+    interpret: bool
+    items: list[PlanItem]
+    compile_seconds: float = 0.0
+    batch_compiles: int = 0
+    _single: Callable | None = dataclasses.field(default=None, repr=False)
+    _batched: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def n(self) -> int:
+        return self.template.n
+
+    @property
+    def num_params(self) -> int:
+        return self.template.num_params
+
+    @property
+    def num_fused_gates(self) -> int:
+        return len(self.items)
+
+    # -- program construction -------------------------------------------------
+    def _program(self):
+        n = self.n
+        if self.backend == "dense":
+            def program(psi, params):
+                for item in self.items:
+                    psi = A.apply_gate_dense(psi, n, item.qubits,
+                                             item.unitary(params),
+                                             item.controls)
+                return psi
+            return program
+        if self.backend == "planar":
+            def program(data, params):
+                for item in self.items:
+                    u = item.unitary(params)
+                    data = A.apply_gate_planar(
+                        data, n, item.qubits,
+                        jnp.real(u).astype(jnp.float32),
+                        jnp.imag(u).astype(jnp.float32), item.controls)
+                return data
+            return program
+        if self.backend == "pallas":
+            from repro.kernels.apply_gate import ops as K
+            v = self.target.lane_qubits
+            interpret = self.interpret
+
+            def program(data, params):
+                for item in self.items:
+                    u = item.unitary(params)
+                    data = K.apply_fused_gate(
+                        data, n, v, item.qubits,
+                        jnp.real(u).astype(jnp.float32),
+                        jnp.imag(u).astype(jnp.float32),
+                        controls=item.controls, interpret=interpret)
+                return data
+            return program
+        raise ValueError(f"unknown backend {self.backend!r}")
+
+    def _params_array(self, params) -> jax.Array:
+        if params is None:
+            params = np.zeros((self.num_params,), np.float32)
+        arr = jnp.asarray(params, jnp.float32).reshape(-1)
+        if arr.shape[0] != self.num_params:
+            raise ValueError(f"{self.template.name}: expected "
+                             f"{self.num_params} parameters, got {arr.shape[0]}")
+        return arr
+
+    def _initial_data(self, initial: SV.State | None):
+        if self.backend == "dense":
+            if initial is not None:
+                return initial.to_dense()
+            return jnp.zeros(1 << self.n, jnp.complex64).at[0].set(1.0)
+        if initial is not None:
+            # the program is lowered for this plan's lane tiling; a state laid
+            # out for another target must be re-tiled by the caller first
+            if initial.v != self.target.lane_qubits:
+                raise ValueError(
+                    f"initial state lane tiling v={initial.v} does not match "
+                    f"plan target {self.target.name} "
+                    f"(v={self.target.lane_qubits}); convert via "
+                    f"from_dense(state.to_dense(), n, target)")
+            return initial.data
+        return SV.zero_state(self.n, self.target).data
+
+    def _wrap(self, data) -> SV.State:
+        if self.backend == "dense":
+            return SV.from_dense(data, self.n, self.target)
+        return SV.State(data=data, n=self.n, v=self.target.lane_qubits)
+
+    # -- execution ------------------------------------------------------------
+    def run(self, params=None, initial: SV.State | None = None) -> SV.State:
+        """Execute for one parameter vector; one dispatch of the fused jit."""
+        if self._single is None:
+            # donate the state buffer on the planar paths (matches the old
+            # per-gate jits); dense allocates a fresh complex input anyway
+            donate = () if self.backend == "dense" else (0,)
+            self._single = jax.jit(self._program(), donate_argnums=donate)
+        data0 = self._initial_data(initial)
+        if initial is not None and self.backend != "dense":
+            data0 = jnp.array(data0)   # don't donate the caller's buffer
+        out = self._single(data0, self._params_array(params))
+        return self._wrap(out)
+
+    def run_batch_raw(self, params_matrix, initial: SV.State | None = None,
+                      initial_batch=None) -> jax.Array:
+        """vmap the program over a [B, P] parameter matrix; returns the
+        stacked state data with a leading batch axis."""
+        pm = jnp.asarray(params_matrix, jnp.float32)
+        if pm.ndim != 2 or pm.shape[1] != self.num_params:
+            raise ValueError(f"{self.template.name}: params matrix must be "
+                             f"[B, {self.num_params}], got {tuple(pm.shape)}")
+        batched_init = initial_batch is not None
+        data0 = (initial_batch if batched_init
+                 else self._initial_data(initial))
+        key = (int(pm.shape[0]), batched_init)
+        fn = self._batched.get(key)
+        if fn is None:
+            fn = self._build_batched(data0, pm, batched_init)
+            self._batched[key] = fn
+            self.batch_compiles += 1
+        return fn(data0, pm)
+
+    def run_batch(self, params_matrix, initial: SV.State | None = None,
+                  ) -> list[SV.State]:
+        out = self.run_batch_raw(params_matrix, initial=initial)
+        return [self._wrap(out[b]) for b in range(out.shape[0])]
+
+    def _build_batched(self, data0, pm, batched_init: bool):
+        program = self._program()
+        in_axes = (0 if batched_init else None, 0)
+        vmapped = jax.vmap(program, in_axes=in_axes)
+        try:
+            jax.eval_shape(vmapped, data0, pm)
+            return jax.jit(vmapped)
+        except Exception:
+            # no batching rule (e.g. pallas_call in some modes): fall back to
+            # a sequential scan inside one jitted program — still a single
+            # compile for the whole batch.
+            if batched_init:
+                def seq(d0, ps):
+                    return jax.lax.map(lambda dp: program(dp[0], dp[1]),
+                                       (d0, ps))
+            else:
+                def seq(d0, ps):
+                    return jax.lax.map(lambda p: program(d0, p), ps)
+            return jax.jit(seq)
+
+
+def resolve_f(f: int | None, target: Target, n: int, fuse: bool,
+              backend: str) -> int:
+    """Effective fusion degree: 0 when fusion is off (dense baseline), else
+    auto-chosen from the target's machine balance and capped by n."""
+    if not fuse or backend == "dense":
+        return 0
+    f_res = f if f is not None else choose_f(target)
+    return max(2, min(f_res, n))
+
+
+def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
+                 f: int | None = None, fuse: bool = True,
+                 interpret: bool = True) -> CompiledPlan:
+    """Cluster once, lower once: build the fused program for one structure."""
+    t0 = time.perf_counter()
+    dummy = template.bind(np.zeros(template.num_params))
+    ops = template.ops
+    f_eff = resolve_f(f, target, template.n, fuse, backend)
+    if f_eff:
+        prep, specs = cluster_gates(dummy.gates, f_eff)
+        items = [_lower_cluster(s, prep, ops) for s in specs]
+    else:
+        items = [_lower_single(op, g) for op, g in zip(ops, dummy.gates)]
+    plan = CompiledPlan(template=template, backend=backend, target=target,
+                        f=f_eff, interpret=interpret, items=items)
+    plan.compile_seconds = time.perf_counter() - t0
+    return plan
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0
+    evictions: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """LRU cache of compiled plans keyed by structure hash + exec config."""
+
+    def __init__(self, max_plans: int = 256):
+        self.max_plans = max_plans
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self.stats = CacheStats()
+
+    @staticmethod
+    def plan_key(template: CircuitTemplate, *, backend: str, target: Target,
+                 f: int | None, fuse: bool, interpret: bool) -> tuple:
+        f_eff = resolve_f(f, target, template.n, fuse, backend)
+        return (template.structure_key(), backend, target.name, f_eff,
+                interpret and backend == "pallas")
+
+    def get_or_compile(self, template: CircuitTemplate | Circuit, *,
+                       backend: str, target: Target, f: int | None = None,
+                       fuse: bool = True,
+                       interpret: bool = True) -> CompiledPlan:
+        if isinstance(template, Circuit):
+            from repro.engine.template import template_of
+            template = template_of(template)
+        key = self.plan_key(template, backend=backend, target=target, f=f,
+                            fuse=fuse, interpret=interpret)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats.hits += 1
+            self._plans.move_to_end(key)
+            return plan
+        self.stats.misses += 1
+        plan = compile_plan(template, backend=backend, target=target, f=f,
+                            fuse=fuse, interpret=interpret)
+        self.stats.compiles += 1
+        self._plans[key] = plan
+        while len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+            self.stats.evictions += 1
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.stats = CacheStats()
+
+
+# module-level default, shared across Simulator instances the way the old
+# per-gate lru_caches were.
+GLOBAL_PLAN_CACHE = PlanCache()

@@ -1,0 +1,146 @@
+"""Request scheduler: queue heterogeneous circuit requests, batch by plan.
+
+The serving analogue of the paper's fixed-cost amortization: requests whose
+templates share a structure hash (and therefore a compiled plan) are grouped
+into batches up to ``max_batch``, padded to the next power of two so only
+O(log max_batch) distinct batched programs ever compile, and dispatched as
+one vmapped execution.  The scheduler is synchronous — ``submit`` enqueues,
+``drain`` flushes — and reports per-request latency plus plan-cache
+hit/miss/compile statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import statevec as SV
+from repro.core.circuits import Circuit
+from repro.engine.batch import BatchExecutor
+from repro.engine.template import CircuitTemplate, template_of
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued circuit execution."""
+
+    req_id: int
+    template: CircuitTemplate
+    params: np.ndarray               # [P]
+    submitted: float
+    result: SV.State | None = None
+    latency: float | None = None     # seconds, submit -> result
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+def _pad_size(b: int, max_batch: int) -> int:
+    """Next power of two >= b, capped at max_batch."""
+    p = 1
+    while p < b:
+        p <<= 1
+    return min(p, max_batch)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    requests: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    latencies: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "padded_slots": self.padded_slots,
+            "latency_mean_ms": float(lat.mean() * 1e3),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+        }
+
+
+class BatchScheduler:
+    """Groups queued requests by plan key and executes them batched."""
+
+    def __init__(self, executor: BatchExecutor | None = None,
+                 max_batch: int = 64, pad_to_pow2: bool = True):
+        self.executor = executor if executor is not None else BatchExecutor()
+        self.max_batch = max_batch
+        self.pad_to_pow2 = pad_to_pow2
+        self.pending: list[Request] = []
+        self.stats = SchedulerStats()
+        self._ids = itertools.count()
+
+    # -- queueing -------------------------------------------------------------
+    def submit(self, template: CircuitTemplate | Circuit,
+               params: Sequence[float] | None = None) -> Request:
+        if isinstance(template, Circuit):
+            template = template_of(template)
+        p = (np.zeros(template.num_params, np.float32) if params is None
+             else np.asarray(params, np.float32).reshape(-1))
+        if p.shape[0] != template.num_params:
+            raise ValueError(f"{template.name}: expected "
+                             f"{template.num_params} params, got {p.shape[0]}")
+        req = Request(req_id=next(self._ids), template=template, params=p,
+                      submitted=time.perf_counter())
+        self.pending.append(req)
+        self.stats.requests += 1
+        return req
+
+    def submit_sweep(self, template: CircuitTemplate,
+                     params_matrix) -> list[Request]:
+        return [self.submit(template, row)
+                for row in np.atleast_2d(np.asarray(params_matrix))]
+
+    # -- dispatch -------------------------------------------------------------
+    def drain(self) -> list[Request]:
+        """Flush the queue: group by plan key, pad, execute, scatter results."""
+        cache = self.executor.cache
+        groups: dict[tuple, list[Request]] = {}
+        for req in self.pending:
+            key = cache.plan_key(
+                req.template, backend=self.executor.backend,
+                target=self.executor.target, f=self.executor.f,
+                fuse=self.executor.fuse, interpret=self.executor.interpret)
+            groups.setdefault(key, []).append(req)
+
+        # dequeue before executing: a failing chunk must not leave its (or
+        # other groups') requests queued for a silent re-run on the next drain
+        self.pending.clear()
+        completed: list[Request] = []
+        for reqs in groups.values():
+            for lo in range(0, len(reqs), self.max_batch):
+                chunk = reqs[lo:lo + self.max_batch]
+                self._run_chunk(chunk)
+                completed += chunk
+        return completed
+
+    def _run_chunk(self, chunk: list[Request]) -> None:
+        template = chunk[0].template
+        pm = np.stack([r.params for r in chunk])
+        b = len(chunk)
+        padded = _pad_size(b, self.max_batch) if self.pad_to_pow2 else b
+        if padded > b:
+            pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
+            self.stats.padded_slots += padded - b
+        states = self.executor.run_batch(template, pm)
+        now = time.perf_counter()
+        for req, state in zip(chunk, states):
+            req.result = state
+            req.latency = now - req.submitted
+            self.stats.latencies.append(req.latency)
+        self.stats.batches += 1
+
+    # -- reporting ------------------------------------------------------------
+    def report(self) -> dict:
+        out = self.stats.summary()
+        out.update({f"cache_{k}": v
+                    for k, v in self.executor.stats.as_dict().items()})
+        return out

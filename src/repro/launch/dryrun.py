@@ -38,6 +38,15 @@ from repro.parallel import sharding as SH
 MESHES = {"pod1": False, "pod2": True}
 
 
+
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict (new jax) or a one-dict-per-
+    device list (older jax); normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
 def _mesh(name: str):
     return make_production_mesh(multi_pod=MESHES[name])
 
@@ -99,7 +108,7 @@ def lower_cell(arch: str, shape_name: str, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         hlo = analyze_hlo(compiled.as_text())
 
     n_dev = mesh.devices.size
@@ -151,7 +160,7 @@ def lower_quantum(n_qubits: int, mesh_name: str, circuit: str = "qrc",
     compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = analyze_hlo(compiled.as_text())
     return {
         "arch": f"quantum-{circuit}{n_qubits}",

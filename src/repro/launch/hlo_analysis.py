@@ -167,10 +167,16 @@ def analyze_hlo(text: str) -> HloStats:
 
 
 def _operands(line: str, op: str) -> list[str]:
+    """Operand names; tolerates both ``dot(%a, %b)`` and the newer
+    ``dot(f32[64,128]{1,0} %a, ...)`` inline-shape form (whose shape commas
+    make naive comma-splitting wrong — pull the ``%name`` tokens instead)."""
     m = re.search(re.escape(op) + r"\(([^)]*)\)", line)
     if not m:
         return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+    names = re.findall(r"%([\w\.\-]+)", m.group(1))
+    if names:
+        return names
+    return [t.strip() for t in m.group(1).split(",") if t.strip()]
 
 
 def _dot_flops(line: str, shapes) -> float:

@@ -1,0 +1,158 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The test suite uses a small slice of the hypothesis API (``given``,
+``settings``, ``strategies.integers/permutations/sampled_from/data`` and
+``Strategy.map``).  The container image does not ship hypothesis, so
+``tests/conftest.py`` installs this stub into ``sys.modules`` when the real
+package is missing.  Draws are plain seeded ``numpy`` RNG samples — every
+example is reproducible from the test name and example index, there is no
+shrinking, and ``deadline``/health-check knobs are ignored.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A draw(rng) callable with hypothesis-style combinators."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self._draw(rng)), f"{self.label}.map")
+
+    def filter(self, pred, max_tries=1000):
+        def draw(rng):
+            for _ in range(max_tries):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise ValueError(f"filter on {self.label} found no example")
+        return Strategy(draw, f"{self.label}.filter")
+
+
+def integers(min_value, max_value):
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value},{max_value})")
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return Strategy(lambda rng: items[int(rng.integers(0, len(items)))],
+                    "sampled_from")
+
+
+def permutations(seq):
+    items = list(seq)
+    return Strategy(lambda rng: [items[i] for i in rng.permutation(len(items))],
+                    "permutations")
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def floats(min_value=0.0, max_value=1.0):
+    return Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)), "floats")
+
+
+class _DataObject:
+    """Interactive draw handle for ``st.data()`` style tests."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng), "data")
+
+
+def data():
+    return _DataStrategy()
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator recording ``max_examples`` on the (given-wrapped) test."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test body over deterministically seeded example draws."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        pos_names = [p for p in sig.parameters
+                     if p not in kw_strategies][:len(arg_strategies)]
+        drawn = dict(zip(pos_names, arg_strategies))
+        drawn.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_stub_max_examples",
+                                 DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n_examples):
+                rng = np.random.default_rng((base << 20) + i)
+                example = {name: s.draw(rng) for name, s in drawn.items()}
+                try:
+                    fn(*args, **kwargs, **example)
+                except _Skip:
+                    continue          # assume() rejected this example
+                except Exception:
+                    print(f"[hypothesis-stub] falsifying example #{i} "
+                          f"of {fn.__qualname__}: {example}",
+                          file=sys.stderr)
+                    raise
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in drawn])
+        return wrapper
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Skip("assumption not satisfied")
+
+
+class _Skip(Exception):
+    pass
+
+
+def install():
+    """Register this module as ``hypothesis`` / ``hypothesis.strategies``."""
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "permutations", "booleans",
+                 "floats", "data"):
+        setattr(strat, name, getattr(this, name))
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+    return hyp

@@ -7,6 +7,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_stub
+    hypothesis_stub.install()
+
 import numpy as np
 import pytest
 

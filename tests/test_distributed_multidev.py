@@ -19,6 +19,7 @@ def _run(devices: int, body: str, timeout: int = 480) -> str:
         os.environ["XLA_FLAGS"] = \
             "--xla_force_host_platform_device_count={devices}"
         import sys; sys.path.insert(0, {SRC!r})
+        from repro.launch.mesh import _make_mesh as _compat_make_mesh
     """) + textwrap.dedent(body)
     out = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=timeout)
@@ -35,8 +36,7 @@ def test_distributed_simulator_matches_dense():
         from repro.core.distributed import DistributedSimulator
         from repro.core.simulator import Simulator
         from repro.core.target import CPU_TEST
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = _compat_make_mesh((2, 4), ("data", "model"))
         for name, n, kw in [("ghz", 9, {}), ("qft", 8, {}),
                             ("grover", 8, {}), ("qv", 8, {})]:
             circ = C.build(name, n, **kw)
@@ -67,8 +67,7 @@ def test_moe_shard_map_matches_fallback():
         x = (jax.random.normal(key, (4, 8, cfg.d_model), jnp.float32)
              * 0.3).astype(jnp.bfloat16)
         ref = L.moe_fwd(p, cfg, x)        # no mesh -> dense fallback
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _compat_make_mesh((4,), ("model",))
         with SH.use_mesh(mesh):
             out = jax.jit(lambda xx: L.moe_fwd(p, cfg, xx))(x)
         err = np.abs(np.asarray(out, np.float32)
@@ -97,8 +96,7 @@ def test_sharded_train_step_matches_single_device():
                  for k, v in M.input_specs(cfg, shape).items()}
         step = M.make_train_step(cfg, AdamWConfig())
         l0, *_ = jax.jit(step)(params, init_opt_state(params), batch)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = _compat_make_mesh((2, 2), ("data", "model"))
         with SH.use_mesh(mesh):
             l1, *_ = jax.jit(step)(params, init_opt_state(params), batch)
         assert abs(float(l0) - float(l1)) < 2e-2, (float(l0), float(l1))
@@ -115,8 +113,7 @@ def test_dryrun_single_cell_small_mesh():
         DR.MESHES = {"tiny": False}
         def tiny(multi_pod=False):
             import jax
-            return jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            return _compat_make_mesh((2, 4), ("data", "model"))
         import repro.launch.mesh as MM
         MM.make_production_mesh = tiny
         DR.make_production_mesh = tiny
@@ -137,8 +134,7 @@ def test_dryrun_fsdp_strategy_small_mesh():
         import repro.launch.mesh as MM
         def tiny(multi_pod=False):
             import jax
-            return jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            return _compat_make_mesh((2, 4), ("data", "model"))
         DR.MESHES = {"tiny": False}
         MM.make_production_mesh = tiny
         DR.make_production_mesh = tiny

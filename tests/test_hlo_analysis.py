@@ -34,7 +34,10 @@ def test_scan_trip_count_correction():
     expected = L * 2 * 8 * d * d
     assert stats.flops == pytest.approx(expected, rel=0.05)
     # raw cost_analysis counts the body once — document the discrepancy
-    raw = co.cost_analysis()["flops"]
+    ca = co.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns one dict per device
+        ca = ca[0]
+    raw = ca["flops"]
     assert raw < expected / 2
 
 
@@ -67,8 +70,8 @@ def test_collective_bytes_counted():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import _make_mesh as _compat_make_mesh
+        mesh = _compat_make_mesh((4,), ("d",))
         def f(x):
             return jax.lax.with_sharding_constraint(
                 jnp.sum(x, axis=0, keepdims=True) + 0.0, NamedSharding(mesh, P()))

@@ -96,9 +96,9 @@ def test_elastic_checkpoint_rescale():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import CheckpointManager
+        from repro.launch.mesh import _make_mesh as _compat_make_mesh
         d = tempfile.mkdtemp()
-        mesh4 = jax.make_mesh((4,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+        mesh4 = _compat_make_mesh((4,), ("data",))
         x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                            NamedSharding(mesh4, P("data", None)))
         m = CheckpointManager(d)
