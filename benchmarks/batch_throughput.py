@@ -20,7 +20,8 @@ LAYERS = 2
 BATCHES = (1, 4, 16, 64)
 
 
-def run_backend(backend: str, n: int = N_QUBITS) -> None:
+def run_backend(backend: str, n: int = N_QUBITS,
+                batches: tuple[int, ...] = BATCHES) -> None:
     ex = BatchExecutor(target=CPU_TEST, backend=backend)
     template = qaoa_template(n, LAYERS)
     plan = ex.plan_for(template)
@@ -33,13 +34,13 @@ def run_backend(backend: str, n: int = N_QUBITS) -> None:
         return out
 
     pm_base = rng.uniform(-np.pi, np.pi,
-                          (max(BATCHES), template.num_params)).astype(np.float32)
+                          (max(batches), template.num_params)).astype(np.float32)
     seq_sec = time_fn(seq_all, pm_base[:1])           # per-circuit dispatch
     seq_per_circuit = seq_sec
     emit(f"batch_{backend}_n{n}_seq", seq_per_circuit,
          f"circuits_per_s={1.0 / seq_per_circuit:.1f}")
 
-    for b in BATCHES:
+    for b in batches:
         pm = pm_base[:b]
         sec = time_fn(plan.run_batch_raw, pm)
         per_circuit = sec / b
@@ -54,5 +55,14 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--qubits", type=int, default=N_QUBITS)
+    ap.add_argument("--batches", default=",".join(map(str, BATCHES)),
+                    help="comma-separated batch sizes")
+    ap.add_argument("--backend", default="planar",
+                    choices=["dense", "planar", "pallas"])
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    main()
+    run_backend(args.backend, n=args.qubits,
+                batches=tuple(int(b) for b in args.batches.split(",")))

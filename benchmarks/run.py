@@ -13,8 +13,8 @@ import traceback
 
 from benchmarks import (batch_throughput, fig6_overall, fig10_fusion,
                         fig11_ai, fig12_ablation, fig13_scaling,
-                        fig14_projection, roofline, tab3_gate_ops,
-                        tab4_vectorization)
+                        fig14_projection, roofline, serve_mixed,
+                        tab3_gate_ops, tab4_vectorization)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -27,6 +27,7 @@ MODULES = {
     "fig14": fig14_projection,
     "roofline": roofline,
     "batch": batch_throughput,
+    "serve": serve_mixed,
 }
 
 

@@ -15,5 +15,5 @@ from repro.engine.plan import (  # noqa: F401
 )
 from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
-    BatchScheduler, Request, SchedulerStats,
+    BatchScheduler, InFlightBatch, Request, RequestState, SchedulerStats,
 )

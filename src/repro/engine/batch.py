@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -55,14 +56,40 @@ class BatchExecutor:
                   params_matrix, initial: SV.State | None = None,
                   ) -> list[SV.State]:
         """Run a [B, P] parameter matrix through one compiled plan."""
+        plan, raw = self.dispatch_batch(template, params_matrix,
+                                        initial=initial)
+        return plan.wrap_batch(raw)
+
+    def dispatch_batch(self, template: CircuitTemplate | Circuit,
+                       params_matrix, initial: SV.State | None = None,
+                       ) -> tuple[CompiledPlan, jax.Array]:
+        """Non-blocking launch: resolve the plan and dispatch the batched
+        program, returning the *unwaited* stacked device output.
+
+        The host returns as soon as the computation is enqueued, so the
+        caller can stage the next batch while this one executes; retire with
+        :meth:`finalize_batch` (or ``jax.block_until_ready`` + ``wrap_batch``).
+        """
         params_matrix = np.atleast_2d(np.asarray(params_matrix, np.float32))
-        return self.plan_for(template).run_batch(params_matrix,
-                                                 initial=initial)
+        plan = self.plan_for(template)
+        return plan, plan.run_batch_raw(params_matrix, initial=initial)
+
+    def finalize_batch(self, plan: CompiledPlan, raw,
+                       count: int | None = None) -> list[SV.State]:
+        """Blocking retire step for :meth:`dispatch_batch`: wait for device
+        results and wrap the first ``count`` rows (all, by default) into
+        :class:`~repro.core.statevec.State` objects."""
+        jax.block_until_ready(raw)
+        return plan.wrap_batch(raw, count=count)
 
     def run_states(self, template: CircuitTemplate | Circuit,
                    initials: Sequence[SV.State], params=None,
                    ) -> list[SV.State]:
         """Shot-batch path: one circuit over B initial states."""
+        initials = list(initials)
+        if not initials:
+            raise ValueError("run_states needs at least one initial state "
+                             "(got an empty sequence)")
         plan = self.plan_for(template)
         if plan.backend == "dense":
             data0 = jnp.stack([s.to_dense() for s in initials])

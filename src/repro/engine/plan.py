@@ -267,8 +267,14 @@ class CompiledPlan:
 
     def run_batch(self, params_matrix, initial: SV.State | None = None,
                   ) -> list[SV.State]:
-        out = self.run_batch_raw(params_matrix, initial=initial)
-        return [self._wrap(out[b]) for b in range(out.shape[0])]
+        return self.wrap_batch(self.run_batch_raw(params_matrix,
+                                                  initial=initial))
+
+    def wrap_batch(self, raw, count: int | None = None) -> list[SV.State]:
+        """Wrap the first ``count`` rows (all, by default) of a stacked
+        ``run_batch_raw`` output into per-circuit states."""
+        count = raw.shape[0] if count is None else count
+        return [self._wrap(raw[b]) for b in range(count)]
 
     def _build_batched(self, data0, pm, batched_init: bool):
         program = self._program()
@@ -294,11 +300,19 @@ class CompiledPlan:
 def resolve_f(f: int | None, target: Target, n: int, fuse: bool,
               backend: str) -> int:
     """Effective fusion degree: 0 when fusion is off (dense baseline), else
-    auto-chosen from the target's machine balance and capped by n."""
+    auto-chosen from the target's machine balance and capped by the state's
+    qubit budget.
+
+    Lane-tiled backends (planar/pallas) only have ``n - lane_qubits`` row
+    qubits, so a fused cluster wider than that row budget would force lane
+    reshuffles the block layout cannot express — mirror the
+    ``min(f, n_local - v)`` cap used by ``core.distributed``.
+    """
     if not fuse or backend == "dense":
         return 0
     f_res = f if f is not None else choose_f(target)
-    return max(2, min(f_res, n))
+    row_budget = max(2, n - target.lane_qubits)
+    return max(2, min(f_res, n, row_budget))
 
 
 def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,

@@ -1,20 +1,39 @@
-"""Request scheduler: queue heterogeneous circuit requests, batch by plan.
+"""Async streaming request scheduler with a reliable request lifecycle.
 
 The serving analogue of the paper's fixed-cost amortization: requests whose
 templates share a structure hash (and therefore a compiled plan) are grouped
 into batches up to ``max_batch``, padded to the next power of two so only
 O(log max_batch) distinct batched programs ever compile, and dispatched as
-one vmapped execution.  The scheduler is synchronous — ``submit`` enqueues,
-``drain`` flushes — and reports per-request latency plus plan-cache
-hit/miss/compile statistics.
+one vmapped execution.
+
+Dispatch is *streamed*: ``submit`` returns a future-like :class:`Request`
+handle, and batches are launched through the executor's non-blocking
+``dispatch_batch`` path.  Up to ``inflight`` launched batches stay unwaited,
+so batch *k+1* is grouped, padded, and its params staged on the host while
+batch *k* executes on the device — the latency-hiding discipline the paper
+applies to fixed costs, applied to host/device overlap.  ``drain`` is the
+synchronous path (each batch blocks before the next launches); ``drain_async``
+keeps the in-flight window open and ``sync`` retires it.
+
+Every request moves through an explicit lifecycle::
+
+    QUEUED -> DISPATCHED -> DONE | FAILED
+
+and no path drops a request: a batch that raises (at plan compile, dispatch,
+or device execution) marks exactly its own requests ``FAILED`` with the
+exception recorded on ``Request.error``, and every other batch still runs.
+Latencies are recorded only after device results are ready — an idle
+scheduler reports no latency at all rather than a fake 0.0 ms.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import time
 from typing import Sequence
 
+import jax
 import numpy as np
 
 from repro.core import statevec as SV
@@ -23,20 +42,51 @@ from repro.engine.batch import BatchExecutor
 from repro.engine.template import CircuitTemplate, template_of
 
 
+class RequestState:
+    """Lifecycle states of a scheduled request."""
+
+    QUEUED = "QUEUED"          # submitted, waiting in the scheduler queue
+    DISPATCHED = "DISPATCHED"  # launched on device, result not yet retired
+    DONE = "DONE"              # result available on Request.result
+    FAILED = "FAILED"          # execution raised; Request.error holds why
+
+
 @dataclasses.dataclass
 class Request:
-    """One queued circuit execution."""
+    """One circuit execution moving through the scheduler lifecycle."""
 
     req_id: int
     template: CircuitTemplate
     params: np.ndarray               # [P]
     submitted: float
+    state: str = RequestState.QUEUED
     result: SV.State | None = None
-    latency: float | None = None     # seconds, submit -> result
+    latency: float | None = None     # seconds, submit -> result ready
+    error: Exception | None = None
+    _batch: "InFlightBatch | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _key: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        """Terminal: the request ended DONE or FAILED."""
+        return self.state in (RequestState.DONE, RequestState.FAILED)
+
+    @property
+    def ok(self) -> bool:
+        return self.state == RequestState.DONE
+
+    def wait(self) -> "Request":
+        """Block until this request is terminal (requires it be dispatched)."""
+        if self.done:
+            return self
+        if self._batch is None:
+            raise RuntimeError(
+                f"request {self.req_id} is {self.state}; call drain() / "
+                f"drain_async() to dispatch it before waiting")
+        self._batch.finalize()
+        return self
 
 
 def _pad_size(b: int, max_batch: int) -> int:
@@ -52,35 +102,112 @@ class SchedulerStats:
     requests: int = 0
     batches: int = 0
     padded_slots: int = 0
+    failed: int = 0
     latencies: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
-        return {
+        out = {
             "requests": self.requests,
             "batches": self.batches,
             "padded_slots": self.padded_slots,
-            "latency_mean_ms": float(lat.mean() * 1e3),
-            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
-            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "failed": self.failed,
         }
+        # no latency keys at all for an idle scheduler — a fabricated 0.0 ms
+        # percentile is indistinguishable from a genuinely fast one
+        if self.latencies:
+            lat = np.asarray(self.latencies)
+            out.update({
+                "latency_mean_ms": float(lat.mean() * 1e3),
+                "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            })
+        return out
+
+
+class InFlightBatch:
+    """One launched batch whose device results have not been retired yet."""
+
+    def __init__(self, plan, requests: list[Request], raw,
+                 stats: SchedulerStats):
+        self.plan = plan
+        self.requests = requests
+        self.raw = raw                   # unwaited device array [padded, ...]
+        self.stats = stats
+        self.finalized = False
+
+    def finalize(self) -> None:
+        """Wait for device results and retire every request (idempotent)."""
+        if self.finalized:
+            return
+        self.finalized = True
+        try:
+            jax.block_until_ready(self.raw)
+        except Exception as e:  # noqa: BLE001 — device-side failure
+            self.raw = None
+            _fail(self.requests, e, self.stats)
+            return
+        now = time.perf_counter()
+        states = self.plan.wrap_batch(self.raw, count=len(self.requests))
+        for req, state in zip(self.requests, states):
+            req.result = state
+            req.latency = now - req.submitted
+            req.state = RequestState.DONE
+            self.stats.latencies.append(req.latency)
+        self.raw = None
+
+
+def _fail(requests: list[Request], error: Exception,
+          stats: SchedulerStats) -> None:
+    """Terminal FAILED transition: record error + latency, never re-raise.
+
+    Failure latencies stay on the Request only — mixing time-to-failure into
+    the aggregate percentiles would skew p50/p99 of the served traffic.
+    """
+    now = time.perf_counter()
+    for req in requests:
+        req.state = RequestState.FAILED
+        req.error = error
+        req.latency = now - req.submitted
+        stats.failed += 1
 
 
 class BatchScheduler:
-    """Groups queued requests by plan key and executes them batched."""
+    """Groups queued requests by plan key and executes them batched.
+
+    ``inflight`` bounds the window of launched-but-unretired batches
+    (double-buffering at the default of 2).  ``max_wait_ms`` enables
+    streaming dispatch from ``submit`` itself: a plan group launches as soon
+    as it reaches ``max_batch`` requests, or once its oldest request has
+    waited longer than ``max_wait_ms``; with the default ``None`` nothing
+    launches until ``drain`` / ``drain_async``.
+    """
 
     def __init__(self, executor: BatchExecutor | None = None,
-                 max_batch: int = 64, pad_to_pow2: bool = True):
+                 max_batch: int = 64, pad_to_pow2: bool = True,
+                 inflight: int = 2, max_wait_ms: float | None = None):
+        if inflight < 0:
+            raise ValueError(f"inflight must be >= 0, got {inflight}")
         self.executor = executor if executor is not None else BatchExecutor()
         self.max_batch = max_batch
         self.pad_to_pow2 = pad_to_pow2
-        self.pending: list[Request] = []
+        self.inflight = inflight
+        self.max_wait_ms = max_wait_ms
         self.stats = SchedulerStats()
         self._ids = itertools.count()
+        self._window: collections.deque[InFlightBatch] = collections.deque()
+        # the queue, grouped by plan key, maintained incrementally so the
+        # streaming trigger check in submit() stays O(group count)
+        self._groups: dict[tuple, list[Request]] = {}
+
+    @property
+    def pending(self) -> list[Request]:
+        """Queued (not yet dispatched) requests, in submit order per group."""
+        return [r for reqs in self._groups.values() for r in reqs]
 
     # -- queueing -------------------------------------------------------------
     def submit(self, template: CircuitTemplate | Circuit,
                params: Sequence[float] | None = None) -> Request:
+        """Enqueue one request; returns a future-like handle immediately."""
         if isinstance(template, Circuit):
             template = template_of(template)
         p = (np.zeros(template.num_params, np.float32) if params is None
@@ -90,57 +217,127 @@ class BatchScheduler:
                              f"{template.num_params} params, got {p.shape[0]}")
         req = Request(req_id=next(self._ids), template=template, params=p,
                       submitted=time.perf_counter())
-        self.pending.append(req)
+        self._groups.setdefault(self._plan_key(req), []).append(req)
         self.stats.requests += 1
+        if self.max_wait_ms is not None:
+            self._poll_triggers()
         return req
 
     def submit_sweep(self, template: CircuitTemplate,
                      params_matrix) -> list[Request]:
-        return [self.submit(template, row)
-                for row in np.atleast_2d(np.asarray(params_matrix))]
+        """Submit one request per row of a ``[B, P]`` parameter matrix.
 
-    # -- dispatch -------------------------------------------------------------
-    def drain(self) -> list[Request]:
-        """Flush the queue: group by plan key, pad, execute, scatter results."""
-        cache = self.executor.cache
-        groups: dict[tuple, list[Request]] = {}
-        for req in self.pending:
-            key = cache.plan_key(
-                req.template, backend=self.executor.backend,
-                target=self.executor.target, f=self.executor.f,
-                fuse=self.executor.fuse, interpret=self.executor.interpret)
-            groups.setdefault(key, []).append(req)
+        A 1-D array is B separate bindings when the template takes one
+        parameter, and a single P-parameter binding otherwise.
+        """
+        arr = np.asarray(params_matrix, np.float32)
+        if arr.ndim == 1:
+            arr = (arr.reshape(-1, 1) if template.num_params == 1
+                   else arr.reshape(1, -1))
+        if arr.ndim != 2 or arr.shape[1] != template.num_params:
+            raise ValueError(
+                f"{template.name}: params matrix must be "
+                f"[B, {template.num_params}], got {tuple(arr.shape)}")
+        return [self.submit(template, row) for row in arr]
 
+    # -- grouping -------------------------------------------------------------
+    def _plan_key(self, req: Request) -> tuple:
+        if req._key is None:
+            ex = self.executor
+            req._key = ex.cache.plan_key(
+                req.template, backend=ex.backend, target=ex.target, f=ex.f,
+                fuse=ex.fuse, interpret=ex.interpret)
+        return req._key
+
+    def _take_groups(self) -> list[list[Request]]:
+        """Dequeue all pending requests, grouped by plan key in FIFO order."""
+        groups = list(self._groups.values())
         # dequeue before executing: a failing chunk must not leave its (or
         # other groups') requests queued for a silent re-run on the next drain
-        self.pending.clear()
-        completed: list[Request] = []
-        for reqs in groups.values():
-            for lo in range(0, len(reqs), self.max_batch):
-                chunk = reqs[lo:lo + self.max_batch]
-                self._run_chunk(chunk)
-                completed += chunk
-        return completed
+        self._groups = {}
+        return groups
 
-    def _run_chunk(self, chunk: list[Request]) -> None:
+    def _poll_triggers(self) -> None:
+        """Streaming dispatch: launch any group that is full or has aged out."""
+        now = time.perf_counter()
+        for key, reqs in list(self._groups.items()):
+            full = len(reqs) >= self.max_batch
+            aged = (now - reqs[0].submitted) * 1e3 >= self.max_wait_ms
+            if full or aged:
+                del self._groups[key]
+                self._dispatch_group(reqs)
+
+    # -- dispatch -------------------------------------------------------------
+    def _dispatch_group(self, reqs: list[Request],
+                        finalize_each: bool = False) -> list[InFlightBatch]:
+        launched = []
+        for lo in range(0, len(reqs), self.max_batch):
+            batch = self._dispatch_chunk(reqs[lo:lo + self.max_batch])
+            if batch is not None:
+                if finalize_each:
+                    batch.finalize()
+                launched.append(batch)
+        return launched
+
+    def _dispatch_chunk(self, chunk: list[Request]) -> InFlightBatch | None:
+        """Launch one chunk non-blocking; FAILED (never raised) on error."""
         template = chunk[0].template
         pm = np.stack([r.params for r in chunk])
         b = len(chunk)
         padded = _pad_size(b, self.max_batch) if self.pad_to_pow2 else b
         if padded > b:
             pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
-            self.stats.padded_slots += padded - b
-        states = self.executor.run_batch(template, pm)
-        now = time.perf_counter()
-        for req, state in zip(chunk, states):
-            req.result = state
-            req.latency = now - req.submitted
-            self.stats.latencies.append(req.latency)
+        try:
+            plan, raw = self.executor.dispatch_batch(template, pm)
+        except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
+            _fail(chunk, e, self.stats)
+            return None
+        self.stats.padded_slots += padded - b
         self.stats.batches += 1
+        batch = InFlightBatch(plan, chunk, raw, self.stats)
+        for req in chunk:
+            req.state = RequestState.DISPATCHED
+            req._batch = batch
+        self._window.append(batch)
+        while len(self._window) > self.inflight:
+            self._window.popleft().finalize()
+        return batch
+
+    def drain(self) -> list[Request]:
+        """Synchronously flush the queue: every returned request is terminal.
+
+        Each batch is retired (host blocks on device results) before the next
+        one launches — the blocking baseline that ``drain_async`` pipelines.
+        """
+        completed: list[Request] = []
+        for reqs in self._take_groups():
+            self._dispatch_group(reqs, finalize_each=True)
+            completed += reqs
+        self.sync()
+        return completed
+
+    def drain_async(self) -> list[Request]:
+        """Launch everything queued without retiring the in-flight window.
+
+        Returned requests are ``DISPATCHED`` (or already terminal); host-side
+        grouping/padding/staging of each batch overlaps device execution of
+        the previous ones.  Retire with ``sync()`` or per-request ``wait()``.
+        """
+        dispatched: list[Request] = []
+        for reqs in self._take_groups():
+            self._dispatch_group(reqs)
+            dispatched += reqs
+        return dispatched
+
+    def sync(self) -> None:
+        """Retire every in-flight batch (oldest first)."""
+        while self._window:
+            self._window.popleft().finalize()
 
     # -- reporting ------------------------------------------------------------
     def report(self) -> dict:
         out = self.stats.summary()
+        out["inflight"] = len([b for b in self._window if not b.finalized])
         out.update({f"cache_{k}": v
                     for k, v in self.executor.stats.as_dict().items()})
         return out

@@ -2,12 +2,15 @@
 
 Simulates a serving workload of parameterized-circuit requests (QAOA sweeps,
 hardware-efficient-ansatz evaluations, fixed benchmark circuits), pushes them
-through the request scheduler, and reports throughput, latency percentiles,
-padding overhead, and plan-cache statistics.
+through the request scheduler — synchronously (``--mode sync``: every batch
+blocks before the next launches) or as the async streaming pipeline
+(``--mode async``: host-side batch formation overlaps device execution under
+an ``--inflight``-deep window) — and reports throughput, latency percentiles,
+failure counts, padding overhead, and plan-cache statistics.
 
   PYTHONPATH=src python -m repro.launch.serve_sim --qubits 10 --requests 128
-  PYTHONPATH=src python -m repro.launch.serve_sim --backend pallas \
-      --workload qaoa --requests 64 --max-batch 32
+  PYTHONPATH=src python -m repro.launch.serve_sim --mode async --inflight 2 \
+      --backend pallas --workload qaoa --requests 64 --max-batch 32
 """
 from __future__ import annotations
 
@@ -40,6 +43,35 @@ def _make_traffic(workload: str, n: int, requests: int, seed: int):
     return out
 
 
+def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
+    """Push traffic through one scheduler; returns wall seconds."""
+    t0 = time.perf_counter()
+    for template, params in traffic:
+        sched.submit(template, params)
+    if mode == "async":
+        sched.drain_async()
+        sched.sync()
+    else:
+        sched.drain()
+    return time.perf_counter() - t0
+
+
+def _print_report(rep: dict, dt: float, label: str, args) -> None:
+    print(f"[{label}] served {rep['requests']} requests in {dt:.3f}s "
+          f"({rep['requests'] / dt:.1f} circuits/s) "
+          f"in {rep['batches']} batches, backend={args.backend}, "
+          f"n={args.qubits}, failed={rep['failed']}")
+    if "latency_p50_ms" in rep:
+        print(f"[{label}] latency ms: mean={rep['latency_mean_ms']:.1f} "
+              f"p50={rep['latency_p50_ms']:.1f} "
+              f"p99={rep['latency_p99_ms']:.1f}; "
+              f"padded slots={rep['padded_slots']}")
+    else:
+        print(f"[{label}] no completed requests -> no latency stats")
+    print(f"[{label}] plan cache: {rep['cache_compiles']} compiles, "
+          f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--qubits", type=int, default=10)
@@ -50,52 +82,52 @@ def main(argv=None):
                     choices=["dense", "planar", "pallas"])
     ap.add_argument("--target", default="cpu_test")
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--mode", default="async", choices=["sync", "async"],
+                    help="sync: drain() blocks per batch; async: streaming "
+                         "pipeline with an in-flight window")
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="async mode: max launched-but-unretired batches")
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="streaming dispatch: launch a plan group once its "
+                         "oldest request has waited this long (default: "
+                         "only drain dispatches)")
     ap.add_argument("--f", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--compare-sequential", action="store_true",
-                    help="also run the traffic one request at a time")
+    ap.add_argument("--compare-sync", action="store_true",
+                    help="also run the same traffic through a fresh "
+                         "synchronous scheduler (warm plans) and report the "
+                         "async speedup")
     args = ap.parse_args(argv)
 
     executor = BatchExecutor(target=get_target(args.target),
                              backend=args.backend, f=args.f)
-    sched = BatchScheduler(executor, max_batch=args.max_batch)
+    sched = BatchScheduler(executor, max_batch=args.max_batch,
+                           inflight=args.inflight,
+                           max_wait_ms=args.max_wait_ms)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
 
-    t0 = time.perf_counter()
-    for template, params in traffic:
-        sched.submit(template, params)
-    done = sched.drain()
-    for req in done:
-        req.result.data.block_until_ready()
-    dt = time.perf_counter() - t0
-
+    dt = _serve(sched, traffic, args.mode)
     rep = sched.report()
-    print(f"served {rep['requests']} requests in {dt:.3f}s "
-          f"({rep['requests'] / dt:.1f} circuits/s) "
-          f"in {rep['batches']} batches, backend={args.backend}, "
-          f"n={args.qubits}")
-    print(f"latency ms: mean={rep['latency_mean_ms']:.1f} "
-          f"p50={rep['latency_p50_ms']:.1f} p99={rep['latency_p99_ms']:.1f}; "
-          f"padded slots={rep['padded_slots']}")
-    print(f"plan cache: {rep['cache_compiles']} compiles, "
-          f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
+    _print_report(rep, dt, args.mode, args)
 
-    if args.compare_sequential:
-        seq_ex = BatchExecutor(target=get_target(args.target),
-                               backend=args.backend, f=args.f)
-        for template, _ in traffic:          # warm plans: isolate dispatch
-            seq_ex.plan_for(template)
-        t0 = time.perf_counter()
-        for template, params in traffic:
-            seq_ex.run(template, params).data.block_until_ready()
-        seq_dt = time.perf_counter() - t0
-        print(f"sequential (warm plans): {seq_dt:.3f}s "
-              f"({args.requests / seq_dt:.1f} circuits/s) -> "
-              f"cold-batched/warm-sequential {seq_dt / dt:.2f}x "
-              f"(batched time above includes its "
+    if args.compare_sync:
+        sync_sched = BatchScheduler(
+            BatchExecutor(target=get_target(args.target),
+                          backend=args.backend, f=args.f,
+                          cache=executor.cache),   # warm plans: isolate overlap
+            max_batch=args.max_batch)
+        before = executor.cache.stats.as_dict()   # shared cache: report deltas
+        sync_dt = _serve(sync_sched, traffic, "sync")
+        sync_rep = sync_sched.report()
+        for k, v in before.items():
+            sync_rep[f"cache_{k}"] -= v
+        _print_report(sync_rep, sync_dt, "sync", args)
+        print(f"{args.mode}(cold) vs sync(warm) speedup: "
+              f"{sync_dt / dt:.2f}x "
+              f"(the {args.mode} time above includes its "
               f"{rep['cache_compiles']} plan compiles; see benchmarks/"
-              f"batch_throughput.py for the steady-state comparison)")
+              f"serve_mixed.py for the steady-state comparison)")
     return 0
 
 
