@@ -13,8 +13,8 @@ import traceback
 
 from benchmarks import (batch_throughput, fig6_overall, fig10_fusion,
                         fig11_ai, fig12_ablation, fig13_scaling,
-                        fig14_projection, roofline, serve_mixed,
-                        tab3_gate_ops, tab4_vectorization)
+                        fig14_projection, gate_classes, roofline,
+                        serve_mixed, tab3_gate_ops, tab4_vectorization)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -28,6 +28,7 @@ MODULES = {
     "roofline": roofline,
     "batch": batch_throughput,
     "serve": serve_mixed,
+    "classes": gate_classes,
 }
 
 

@@ -21,6 +21,46 @@ import numpy as np
 _SQRT2_INV = 1.0 / np.sqrt(2.0)
 
 
+# Structural gate classes (paper §IV-D adaptation; see core.fusion /
+# engine.plan).  "diagonal" and "permutation" gates admit matmul-free
+# application: a diagonal is an elementwise phase rotation, a permutation
+# (monomial: one nonzero per row/column, arbitrary phases — X, Y, CX, SWAP)
+# is a static gather plus an optional phase rotation.
+GATE_CLASSES = ("diagonal", "permutation", "general")
+_CLASS_ATOL = 1e-6
+
+
+def gate_class(matrix: np.ndarray, atol: float = _CLASS_ATOL) -> str:
+    """Classify a unitary as ``diagonal | permutation | general``.
+
+    ``permutation`` means *monomial*: exactly one nonzero entry per row and
+    per column (phases allowed), excluding the diagonal case.  The check is
+    structural (numpy, compile time) and conservative: anything else is
+    ``general``.
+    """
+    m = np.asarray(matrix)
+    nz = np.abs(m) > atol
+    if not np.any(nz & ~np.eye(m.shape[0], dtype=bool)):
+        return "diagonal"
+    if np.all(nz.sum(axis=0) == 1) and np.all(nz.sum(axis=1) == 1):
+        return "permutation"
+    return "general"
+
+
+def monomial_decompose(matrix: np.ndarray,
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Split a diagonal/permutation matrix into ``(perm, phase)`` with
+    ``out[r] = phase[r] * in[perm[r]]`` (i.e. ``matrix[r, perm[r]] =
+    phase[r]``, all other entries zero).  Raises for general matrices."""
+    m = np.asarray(matrix, np.complex64)
+    nz = np.abs(m) > _CLASS_ATOL
+    if not (np.all(nz.sum(axis=0) == 1) and np.all(nz.sum(axis=1) == 1)):
+        raise ValueError("matrix is not diagonal or monomial")
+    perm = nz.argmax(axis=1)
+    phase = m[np.arange(m.shape[0]), perm]
+    return perm.astype(np.int64), phase.astype(np.complex64)
+
+
 @dataclasses.dataclass(frozen=True)
 class Gate:
     qubits: tuple[int, ...]
@@ -47,6 +87,13 @@ class Gate:
     @property
     def all_qubits(self) -> tuple[int, ...]:
         return tuple(sorted(self.qubits + self.controls))
+
+    @property
+    def gate_class(self) -> str:
+        """Structural class of the full operator (controls included): a
+        controlled gate whose target matrix is diagonal is itself diagonal;
+        a controlled permutation (CX, CCX) is a permutation."""
+        return gate_class(self.matrix)
 
     def flops(self) -> int:
         """Real FLOPs of one group matvec: per row, d complex mults (6 real

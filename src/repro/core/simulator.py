@@ -34,6 +34,7 @@ class Simulator:
     f: int | None = None           # horizontal fusion degree; None = auto
     fuse: bool = True
     interpret: bool = True         # Pallas interpret mode (CPU container)
+    specialize: bool = True        # gate-class-specialized plan lowering
     plan_cache: object | None = None  # engine.PlanCache; None = shared global
 
     def __post_init__(self):
@@ -57,7 +58,8 @@ class Simulator:
             raise ValueError(f"unknown backend {self.backend!r}")
         return self.plan_cache.get_or_compile(
             circuit, backend=self.backend, target=self.target, f=self.f,
-            fuse=self.fuse, interpret=self.interpret)
+            fuse=self.fuse, interpret=self.interpret,
+            specialize=self.specialize)
 
     # -- execution ------------------------------------------------------------
     def run(self, circuit: Circuit, initial: SV.State | None = None,

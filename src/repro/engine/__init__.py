@@ -11,7 +11,7 @@ from repro.engine.template import (  # noqa: F401
 )
 from repro.engine.plan import (  # noqa: F401
     CompiledPlan, PlanCache, PlanItem, CacheStats, compile_plan,
-    GLOBAL_PLAN_CACHE,
+    resolve_diag_f, PARAM_OP_CLASS, GLOBAL_PLAN_CACHE,
 )
 from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401

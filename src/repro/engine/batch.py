@@ -32,6 +32,7 @@ class BatchExecutor:
     f: int | None = None             # fusion degree; None = auto
     fuse: bool = True
     interpret: bool = True           # Pallas interpret mode
+    specialize: bool = True          # gate-class-specialized lowering
     cache: PlanCache | None = None
 
     def __post_init__(self):
@@ -44,7 +45,8 @@ class BatchExecutor:
             template = template_of(template)
         return self.cache.get_or_compile(
             template, backend=self.backend, target=self.target, f=self.f,
-            fuse=self.fuse, interpret=self.interpret)
+            fuse=self.fuse, interpret=self.interpret,
+            specialize=self.specialize)
 
     # -- execution ------------------------------------------------------------
     def run(self, template: CircuitTemplate | Circuit, params=None,
@@ -104,3 +106,8 @@ class BatchExecutor:
     @property
     def stats(self) -> CacheStats:
         return self.cache.stats
+
+    def class_counts(self) -> dict:
+        """Fused-gate counts by lowering class across all cached plans —
+        how much of the compiled traffic runs matmul-free."""
+        return self.cache.class_counts()

@@ -29,9 +29,23 @@ from repro.core import apply as A
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.fusion import choose_f, cluster_gates, realize_cluster
-from repro.core.gates import Gate, expand_unitary
+from repro.core.gates import (Gate, expand_unitary, gate_class,
+                              monomial_decompose)
 from repro.core.target import Target
 from repro.engine.template import PARAM_KINDS, CircuitTemplate, TemplateOp
+
+# Structural class of a parameterized op, valid for *every* angle — the dummy
+# binding used for clustering sees rx(0) = I, which would misclassify rx as
+# diagonal, so the class must come from the op kind, not the bound matrix.
+PARAM_OP_CLASS = {"rz": "diagonal", "phase": "diagonal",
+                  "rx": "general", "ry": "general"}
+
+# Diagonal param kinds are pure phases exp(i * theta * c[bit]): rz_m is
+# diag(e^{-i theta/2}, e^{+i theta/2}), phase_m is diag(1, e^{i phi}).  The
+# specialized lowering turns each such member into a static per-row angle
+# coefficient vector, so a binding costs one axpy per rotation plus a single
+# cos/sin — no matrix construction, no gathers from traced arrays.
+DIAG_PARAM_COEFF = {"rz": (-0.5, 0.5), "phase": (0.0, 1.0)}
 
 
 @functools.lru_cache(maxsize=4096)
@@ -67,17 +81,111 @@ def _param_matrix(op: TemplateOp, params) -> jax.Array:
     return PARAM_KINDS[op.kind].jax_fn(op.scale * params[op.param])
 
 
+@functools.lru_cache(maxsize=4096)
+def _sub_index_map(sub_qubits: tuple[int, ...], full_qubits: tuple[int, ...],
+                   ) -> np.ndarray:
+    """int64[2**w]: the sub-space index formed by ``sub_qubits``' bits at
+    each index of the ``full_qubits`` cluster space."""
+    pos = {q: i for i, q in enumerate(full_qubits)}
+    idx = np.arange(1 << len(full_qubits), dtype=np.int64)
+    out = np.zeros_like(idx)
+    for bi, q in enumerate(sub_qubits):
+        out |= ((idx >> pos[q]) & 1) << bi
+    return out
+
+
+def _amp_cluster_index(qubits: tuple[int, ...], n: int) -> np.ndarray:
+    """int32[2**n]: the cluster-space index of each dense amplitude (qubit
+    ``q`` is bit ``q`` of the amplitude index; cluster bit ``m`` is
+    ``qubits[m]``) — ``_sub_index_map`` over the full amplitude space."""
+    return _sub_index_map(qubits, tuple(range(n))).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=4096)
+def _phase_broadcast_shapes(qubits: tuple[int, ...], n: int,
+                            ) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """``(dims, bshape)``: factorize the flat ``2**n`` amplitude axis (MSB
+    first) with maximal contiguous runs of cluster qubits merged into single
+    axes.  A diagonal application is then ``state.reshape(dims) *
+    phase.reshape(bshape)`` — a reshape + broadcast elementwise multiply
+    with no gather and no moveaxis; a cluster of low qubits collapses to
+    just two axes."""
+    dims: list[int] = []
+    bshape: list[int] = []
+    qs = sorted(qubits, reverse=True)
+    prev = n
+    i = 0
+    while i < len(qs):
+        j = i
+        while j + 1 < len(qs) and qs[j + 1] == qs[j] - 1:
+            j += 1
+        hi, lo = qs[i], qs[j]
+        seg = prev - hi - 1
+        if seg > 0:
+            dims.append(1 << seg)
+            bshape.append(1)
+        dims.append(1 << (hi - lo + 1))
+        bshape.append(1 << (hi - lo + 1))
+        prev = lo
+        i = j + 1
+    if prev > 0:
+        dims.append(1 << prev)
+        bshape.append(1)
+    return tuple(dims), tuple(bshape)
+
+
+def _member_monomial(g: Gate, full_qubits: tuple[int, ...],
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Lift a diagonal/monomial member gate into cluster space as
+    ``(P, phi)`` with ``out[x] = phi[x] * in[P[x]]``."""
+    perm_s, phase_s = monomial_decompose(g.matrix)
+    sub = _sub_index_map(g.qubits, full_qubits)
+    pos = {q: i for i, q in enumerate(full_qubits)}
+    mask = 0
+    for q in g.qubits:
+        mask |= 1 << pos[q]
+    x = np.arange(1 << len(full_qubits), dtype=np.int64)
+    src = perm_s[sub]                       # sub-space source per cluster index
+    scat = np.zeros_like(x)
+    for bi, q in enumerate(g.qubits):
+        scat |= ((src >> bi) & 1) << pos[q]
+    return (x & ~mask) | scat, phase_s[sub]
+
+
+_IDENTITY_ATOL = 1e-6
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanItem:
-    """One fused gate application inside the compiled program."""
+    """One fused gate application inside the compiled program.
+
+    ``kind`` selects the lowering:
+
+    * ``"dense"`` — generic ``2**w x 2**w`` complex matvec (4 real matmuls),
+      built from ``factors``.
+    * ``"diag"``  — elementwise phase rotation by ``phase_planes(params)``
+      (6 real flops/amp, no moveaxis, no matmul).  Controls, if any, were
+      folded into the phase vector, so ``controls`` is empty.
+    * ``"perm"``  — static index-map gather ``perm`` over the cluster space,
+      optionally followed by the phase rotation (monomial clusters).
+    """
 
     qubits: tuple[int, ...]
     controls: tuple[int, ...]
-    factors: tuple                  # ("const", ndarray) | ("param", op, maps)
+    factors: tuple = ()             # ("const", ndarray) | ("param", op, maps)
+    kind: str = "dense"             # dense | diag | perm
+    perm: np.ndarray | None = None  # int32[2**w], kind == "perm" only
+    phases: tuple = ()              # ("const", vec) | ("param", op, coeff)
+    generic_flops: float | None = None  # flops/amp of the dense alternative
 
     @property
     def is_constant(self) -> bool:
-        return all(f[0] == "const" for f in self.factors)
+        return (all(f[0] == "const" for f in self.factors)
+                and all(p[0] == "const" for p in self.phases))
+
+    @property
+    def has_param_phase(self) -> bool:
+        return any(p[0] == "param" for p in self.phases)
 
     def unitary(self, params) -> jax.Array:
         """Fused complex64 unitary for one parameter vector (traceable)."""
@@ -93,10 +201,192 @@ class PlanItem:
             u = e if u is None else e @ u
         return u.astype(jnp.complex64)
 
+    def _phase_angle(self, params) -> jax.Array | None:
+        """f32[2**w] accumulated rotation angle of the parameterized phase
+        terms: one scalar-times-static-coefficient-vector axpy per term."""
+        ang = None
+        for p in self.phases:
+            if p[0] != "param":
+                continue
+            _, op, coeff = p
+            a = params[op.param] * jnp.asarray(coeff)
+            ang = a if ang is None else ang + a
+        return ang
 
-def _lower_cluster(spec, prep: Sequence[Gate],
-                   ops: Sequence[TemplateOp]) -> PlanItem:
-    """Fold a cluster into constant factors with param gates spliced in."""
+    def _np_const_phase(self) -> np.ndarray | None:
+        """Product of the constant phase entries (numpy), or None."""
+        v = None
+        for p in self.phases:
+            if p[0] == "const":
+                v = p[1] if v is None else (v * p[1]).astype(np.complex64)
+        return v
+
+    def phase_planes(self, params) -> tuple[jax.Array, jax.Array]:
+        """f32 (re, im) planes of the phase vector — cos/sin directly, no
+        complex intermediates (planar/pallas backends)."""
+        const = self._np_const_phase()
+        ang = self._phase_angle(params)
+        if ang is None:
+            return (jnp.asarray(np.real(const).astype(np.float32)),
+                    jnp.asarray(np.imag(const).astype(np.float32)))
+        c, s = jnp.cos(ang), jnp.sin(ang)
+        if const is None:
+            return c, s
+        cr = jnp.asarray(np.real(const).astype(np.float32))
+        ci = jnp.asarray(np.imag(const).astype(np.float32))
+        return c * cr - s * ci, c * ci + s * cr
+
+    def np_phase_vector(self) -> np.ndarray:
+        """Constant phase vector as numpy (requires ``not has_param_phase``)."""
+        v = np.ones(1 << len(self.qubits), np.complex64)
+        for p in self.phases:
+            if p[0] != "const":
+                raise ValueError("parameterized phase needs phase_planes()")
+            v = v * p[1]
+        return v.astype(np.complex64)
+
+
+def _lower_controlled_diag(g: Gate) -> PlanItem:
+    """Lower a controlled cluster with a diagonal target into one phase
+    vector over the full span (targets + controls): the full operator is
+    diagonal — identity except where every control bit is set."""
+    span = tuple(sorted(g.qubits + g.controls))
+    pos = {q: i for i, q in enumerate(span)}
+    cmask = 0
+    for c in g.controls:
+        cmask |= 1 << pos[c]
+    idx = np.arange(1 << len(span), dtype=np.int64)
+    sel = (idx & cmask) == cmask
+    sub = _sub_index_map(g.qubits, span)
+    phase = np.ones(1 << len(span), np.complex64)
+    phase[sel] = np.diagonal(g.matrix)[sub[sel]]
+    # the dense alternative is an 8*2^k matvec on the control-satisfied
+    # 2^-c fraction of amplitudes
+    generic = 8.0 * (1 << g.k) / (1 << len(g.controls))
+    return PlanItem(span, (), kind="diag", phases=(("const", phase),),
+                    generic_flops=generic)
+
+
+def _lower_special(spec, prep: Sequence[Gate],
+                   ops: Sequence[TemplateOp]) -> PlanItem | None:
+    """Lower a diagonal/monomial cluster to a static index map + phase
+    vector — the matmul-free fast path.
+
+    The accumulated transform of the members applied so far is
+    ``out[x] = phi[x] * in[pi[x]]`` with ``phi`` a product of one folded
+    constant vector and per-parameterized-member diagonal gathers.  Applying
+    the next member ``M = (P_M, phi_M)`` composes as ``phi' = phi_M *
+    phi[P_M]``, ``pi' = pi[P_M]``; parameterized members (rz/phase) are
+    purely diagonal, so their ``P_M`` is the identity and their traced phase
+    joins as one more factor.  If the net permutation is the identity the
+    cluster is *refined* to a pure diagonal (QAOA's CNOT·RZ·CNOT blocks);
+    if the whole transform is the identity the item is elided entirely.
+    """
+    w = len(spec.qubits)
+    pi = np.arange(1 << w, dtype=np.int64)
+    const = np.ones(1 << w, np.complex64)
+    params: list = []                # [op, coeff_vec f32] — mutable coeff
+    for i in spec.members:
+        op = ops[i]
+        g = prep[i]
+        if op.kind == "fixed":
+            p_m, phi_m = _member_monomial(g, spec.qubits)
+            const = (phi_m * const[p_m]).astype(np.complex64)
+            for t in params:
+                t[1] = t[1][p_m]
+            pi = pi[p_m]
+        else:
+            if op.kind not in DIAG_PARAM_COEFF:
+                raise AssertionError(
+                    f"non-diagonal param op {op.kind!r} in special cluster")
+            c0, c1 = DIAG_PARAM_COEFF[op.kind]
+            bits = _sub_index_map(op.qubits, spec.qubits)
+            coeff = (op.scale * np.where(bits == 1, c1, c0)).astype(np.float32)
+            params.append([op, coeff])
+    phases: list = []
+    if np.abs(const - 1.0).max() > _IDENTITY_ATOL:
+        phases.append(("const", const))
+    phases += _merge_param_coeffs(params)
+    is_id_perm = bool(np.array_equal(pi, np.arange(1 << w)))
+    if is_id_perm and not phases:
+        return None                        # identity cluster (e.g. CNOT·CNOT)
+    generic = 8.0 * (1 << w)               # the dense matvec this replaces
+    if is_id_perm:
+        return PlanItem(spec.qubits, (), kind="diag", phases=tuple(phases),
+                        generic_flops=generic)
+    return PlanItem(spec.qubits, (), kind="perm", perm=pi.astype(np.int32),
+                    phases=tuple(phases), generic_flops=generic)
+
+
+def _merge_param_coeffs(terms) -> list:
+    """Fold ``(op, coeff_vec)`` phase terms per distinct parameter index:
+    ``exp(i p c1) exp(i p c2) = exp(i p (c1 + c2))`` — one axpy per
+    *distinct* parameter, not per gate (QAOA: one term per cost layer
+    instead of one per edge)."""
+    merged: dict[int, list] = {}
+    for op, coeff in terms:
+        if op.param in merged:
+            merged[op.param][1] = merged[op.param][1] + coeff
+        else:
+            merged[op.param] = [op, coeff]
+    return [("param", op, coeff) for op, coeff in merged.values()]
+
+
+def _merge_diag_items(run: list[PlanItem]) -> PlanItem:
+    """Compose a run of consecutive diagonal items into one item over the
+    union of their qubits: constants multiply, angle-coefficient vectors
+    add (re-merged per distinct parameter)."""
+    qubits = tuple(sorted(set().union(*[set(it.qubits) for it in run])))
+    const = np.ones(1 << len(qubits), np.complex64)
+    has_const = False
+    terms: list = []
+    for it in run:
+        sub = _sub_index_map(it.qubits, qubits)
+        for p in it.phases:
+            if p[0] == "const":
+                const = (const * p[1][sub]).astype(np.complex64)
+                has_const = True
+            else:
+                _, op, coeff = p
+                terms.append((op, coeff[sub].astype(np.float32)))
+    phases: list = []
+    if has_const:
+        phases.append(("const", const))
+    phases += _merge_param_coeffs(terms)
+    generic = sum(it.generic_flops or 8.0 * (1 << len(it.qubits))
+                  for it in run)
+    return PlanItem(qubits, (), kind="diag", phases=tuple(phases),
+                    generic_flops=generic)
+
+
+def _coalesce_diag_runs(items: list[PlanItem]) -> list[PlanItem]:
+    """Merge adjacent diagonal items (they commute and compose elementwise)
+    into single full-width rotations: a QAOA cost stack that clustered into
+    several row-budget-capped phase vectors becomes ONE state sweep — one
+    cos/sin per distinct parameter, one rotation pass.  Used by the planar
+    backend, whose diagonal application is pure elementwise arithmetic at
+    any width; the pallas backend keeps per-item kernels so each block's
+    phase vector stays within the VMEM budget."""
+    out: list[PlanItem] = []
+    run: list[PlanItem] = []
+    for item in items:
+        if item.kind == "diag":
+            run.append(item)
+            continue
+        if run:
+            out.append(run[0] if len(run) == 1 else _merge_diag_items(run))
+            run = []
+        out.append(item)
+    if run:
+        out.append(run[0] if len(run) == 1 else _merge_diag_items(run))
+    return out
+
+
+def _lower_cluster(spec, prep: Sequence[Gate], ops: Sequence[TemplateOp],
+                   diag_cap: int | None = None) -> PlanItem | None:
+    """Fold a cluster into a plan item: the matmul-free diag/perm fast path
+    when the cluster's class allows it (``diag_cap`` set = specialization
+    on), else constant factors with param gates spliced in."""
     if spec.controls:
         # controlled clusters never contain parameterized members (param ops
         # are control-free, so clustering keeps them out) — fold in numpy.
@@ -104,7 +394,13 @@ def _lower_cluster(spec, prep: Sequence[Gate],
             if ops[i].kind != "fixed":
                 raise AssertionError("parameterized op in controlled cluster")
         g = realize_cluster(spec, prep)
+        if (diag_cap is not None and spec.cls == "diagonal"
+                and g.k + len(g.controls) <= diag_cap):
+            return _lower_controlled_diag(g)
         return PlanItem(g.qubits, g.controls, (("const", g.matrix),))
+
+    if diag_cap is not None and spec.cls in ("diagonal", "permutation"):
+        return _lower_special(spec, prep, ops)
 
     factors: list = []
     acc: np.ndarray | None = None
@@ -136,9 +432,27 @@ def _lower_single(op: TemplateOp, g: Gate) -> PlanItem:
                     (("param", op, _embed_maps(ident, ident)),))
 
 
+def _full_perm_map(qubits: tuple[int, ...], n: int,
+                   perm: np.ndarray) -> np.ndarray:
+    """int32[2**n]: lift a cluster-space permutation to the full amplitude
+    space (identity on non-cluster bits)."""
+    sub = _amp_cluster_index(qubits, n).astype(np.int64)
+    src = perm.astype(np.int64)[sub]
+    mask = 0
+    for q in qubits:
+        mask |= 1 << q
+    idx = np.arange(1 << n, dtype=np.int64)
+    scat = np.zeros_like(idx)
+    for bi, q in enumerate(qubits):
+        scat |= ((src >> bi) & 1) << q
+    return ((idx & ~mask) | scat).astype(np.int32)
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """A fused, jitted execution program for one template structure."""
+
+    MAX_BATCHED_PROGRAMS = 8
 
     template: CircuitTemplate
     backend: str
@@ -146,10 +460,15 @@ class CompiledPlan:
     f: int
     interpret: bool
     items: list[PlanItem]
+    specialize: bool = True
     compile_seconds: float = 0.0
     batch_compiles: int = 0
+    batch_evictions: int = 0
+    cache_stats: "CacheStats | None" = dataclasses.field(
+        default=None, repr=False)
     _single: Callable | None = dataclasses.field(default=None, repr=False)
-    _batched: dict = dataclasses.field(default_factory=dict, repr=False)
+    _batched: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict, repr=False)
 
     @property
     def n(self) -> int:
@@ -163,43 +482,157 @@ class CompiledPlan:
     def num_fused_gates(self) -> int:
         return len(self.items)
 
-    # -- program construction -------------------------------------------------
-    def _program(self):
-        n = self.n
-        if self.backend == "dense":
-            def program(psi, params):
-                for item in self.items:
-                    psi = A.apply_gate_dense(psi, n, item.qubits,
-                                             item.unitary(params),
-                                             item.controls)
-                return psi
-            return program
-        if self.backend == "planar":
-            def program(data, params):
-                for item in self.items:
-                    u = item.unitary(params)
-                    data = A.apply_gate_planar(
-                        data, n, item.qubits,
-                        jnp.real(u).astype(jnp.float32),
-                        jnp.imag(u).astype(jnp.float32), item.controls)
-                return data
-            return program
-        if self.backend == "pallas":
-            from repro.kernels.apply_gate import ops as K
-            v = self.target.lane_qubits
-            interpret = self.interpret
+    # -- per-class stats ------------------------------------------------------
+    def class_counts(self) -> dict:
+        """Fused-gate counts by lowering class (diag/perm items are the
+        matmul-free fast paths; dense items take the generic matvec)."""
+        counts = {"diagonal": 0, "permutation": 0, "general": 0}
+        for item in self.items:
+            counts[{"diag": "diagonal", "perm": "permutation"}.get(
+                item.kind, "general")] += 1
+        return counts
 
-            def program(data, params):
-                for item in self.items:
-                    u = item.unitary(params)
-                    data = K.apply_fused_gate(
-                        data, n, v, item.qubits,
-                        jnp.real(u).astype(jnp.float32),
-                        jnp.imag(u).astype(jnp.float32),
-                        controls=item.controls, interpret=interpret)
-                return data
-            return program
-        raise ValueError(f"unknown backend {self.backend!r}")
+    def flops_per_amp(self) -> dict:
+        """Estimated real flops per state amplitude: actual (per-class
+        lowering) vs generic (each item as the dense matvec it replaces —
+        recorded at lowering time, so controlled items are weighted by
+        their control-satisfied ``2**-c`` amplitude fraction)."""
+        generic = actual = 0.0
+        for item in self.items:
+            dense = (8.0 * (1 << len(item.qubits))
+                     / (1 << len(item.controls)))
+            g = item.generic_flops if item.generic_flops is not None else dense
+            generic += g
+            if item.kind in ("diag", "perm"):
+                # phase-free permutations are pure memory traffic
+                actual += 6.0 if item.phases else 0.0
+            else:
+                actual += dense
+        return {"flops_per_amp_generic": generic,
+                "flops_per_amp_actual": actual,
+                "flops_saved_frac": 1.0 - actual / generic if generic else 0.0}
+
+    # -- program construction -------------------------------------------------
+    def _step(self, item: PlanItem):
+        """Build the per-item closure for this plan's backend."""
+        n = self.n
+        if item.kind in ("diag", "perm"):
+            return self._special_step(item)
+        if self.backend == "dense":
+            def step(psi, params):
+                return A.apply_gate_dense(psi, n, item.qubits,
+                                          item.unitary(params), item.controls)
+            return step
+        if self.backend == "planar":
+            def step(data, params):
+                u = item.unitary(params)
+                return A.apply_gate_planar(
+                    data, n, item.qubits,
+                    jnp.real(u).astype(jnp.float32),
+                    jnp.imag(u).astype(jnp.float32), item.controls)
+            return step
+        from repro.kernels.apply_gate import ops as K
+        v = self.target.lane_qubits
+        interpret = self.interpret
+
+        def step(data, params):
+            u = item.unitary(params)
+            return K.apply_fused_gate(
+                data, n, v, item.qubits,
+                jnp.real(u).astype(jnp.float32),
+                jnp.imag(u).astype(jnp.float32),
+                controls=item.controls, interpret=interpret)
+        return step
+
+    def _special_step(self, item: PlanItem):
+        """Matmul-free lowering of a diag/perm item.
+
+        planar: the ``2**w`` phase planes are broadcast over the state by a
+        reshape that merges contiguous qubit runs into whole axes
+        (``_phase_broadcast_shapes``) — an elementwise multiply with no
+        gather and no moveaxis — and permutations are a single static
+        ``take`` over the flat amplitude axis.  pallas: the phase rotates
+        one VMEM block in-register (``_diag_kernel``), with the permutation
+        folded into the block's row gather.  The dense backend never builds
+        special items: ``resolve_f`` pins it to f=0, keeping it the
+        unspecialized naive baseline / oracle.
+        """
+        if self.backend == "dense":
+            raise AssertionError(
+                "dense plans are never specialized (resolve_f forces f=0 "
+                "for the naive baseline)")
+        n = self.n
+        dims, bshape = _phase_broadcast_shapes(item.qubits, n)
+        has_phase = bool(item.phases)
+        const_phase = (item.np_phase_vector()
+                       if has_phase and not item.has_param_phase else None)
+        # permutation lowering: an XOR-mask permutation (X layers, composed
+        # bit flips) is a vectorized axis reversal — no gather at all;
+        # anything else is one static take over the flat amplitude axis
+        src = flip_dims = flip_axes = None
+        if item.perm is not None:
+            w = len(item.qubits)
+            mask = int(item.perm[0])
+            if np.array_equal(item.perm,
+                              np.arange(1 << w, dtype=np.int64) ^ mask):
+                flip_qs = tuple(q for m, q in enumerate(item.qubits)
+                                if (mask >> m) & 1)
+                flip_dims, fshape = _phase_broadcast_shapes(flip_qs, n)
+                flip_axes = tuple(i for i, b in enumerate(fshape) if b > 1)
+            else:
+                src = _full_perm_map(item.qubits, n, item.perm)
+
+        if self.backend == "planar":
+            if const_phase is not None:
+                pr_np = np.real(const_phase).reshape(bshape).astype(np.float32)
+                pi_np = np.imag(const_phase).reshape(bshape).astype(np.float32)
+
+            def step(data, params):
+                shape = data.shape
+                flat = data.reshape(2, -1)
+                if flip_axes is not None:
+                    flat = jnp.flip(flat.reshape((2,) + flip_dims),
+                                    axis=[a + 1 for a in flip_axes]
+                                    ).reshape(2, -1)
+                elif src is not None:
+                    flat = flat[:, src]
+                if has_phase:
+                    if const_phase is not None:
+                        pr, pi = jnp.asarray(pr_np), jnp.asarray(pi_np)
+                    else:
+                        pr_w, pi_w = item.phase_planes(params)
+                        pr, pi = pr_w.reshape(bshape), pi_w.reshape(bshape)
+                    t = flat.reshape((2,) + dims)
+                    re, im = t[0], t[1]
+                    flat = jnp.stack([pr * re - pi * im, pr * im + pi * re]
+                                     ).reshape(2, -1)
+                return flat.reshape(shape)
+            return step
+
+        from repro.kernels.apply_gate import ops as K
+        v = self.target.lane_qubits
+        interpret = self.interpret
+        perm = item.perm
+
+        def step(data, params):
+            if has_phase:
+                p_re, p_im = item.phase_planes(params)
+            else:
+                p_re = p_im = None
+            return K.apply_phase_gate(data, n, v, item.qubits, p_re, p_im,
+                                      perm=perm, interpret=interpret)
+        return step
+
+    def _program(self):
+        if self.backend not in ("dense", "planar", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        steps = [self._step(item) for item in self.items]
+
+        def program(state, params):
+            for step in steps:
+                state = step(state, params)
+            return state
+        return program
 
     def _params_array(self, params) -> jax.Array:
         if params is None:
@@ -263,6 +696,15 @@ class CompiledPlan:
             fn = self._build_batched(data0, pm, batched_init)
             self._batched[key] = fn
             self.batch_compiles += 1
+            # bound the per-plan dict of batched executables: distinct batch
+            # sizes / init modes would otherwise accumulate without limit
+            while len(self._batched) > self.MAX_BATCHED_PROGRAMS:
+                self._batched.popitem(last=False)
+                self.batch_evictions += 1
+                if self.cache_stats is not None:
+                    self.cache_stats.batch_evictions += 1
+        else:
+            self._batched.move_to_end(key)
         return fn(data0, pm)
 
     def run_batch(self, params_matrix, initial: SV.State | None = None,
@@ -315,21 +757,53 @@ def resolve_f(f: int | None, target: Target, n: int, fuse: bool,
     return max(2, min(f_res, n, row_budget))
 
 
+def resolve_diag_f(f_eff: int, target: Target, n: int) -> int:
+    """Width cap for diagonal/monomial clusters: the full row budget
+    ``n - lane_qubits`` (never below the general degree ``f_eff``).
+
+    A diagonal cluster composes into a ``2**w`` phase *vector*, not a
+    ``4**w`` matrix, so widening it raises fusion reduction at O(2**w)
+    memory and zero extra flops per amplitude — the only binding limit is
+    the lane-tiled backends' row budget (mirroring :func:`resolve_f`).
+    """
+    return max(f_eff, 2, n - target.lane_qubits)
+
+
 def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None = None, fuse: bool = True,
-                 interpret: bool = True) -> CompiledPlan:
-    """Cluster once, lower once: build the fused program for one structure."""
+                 interpret: bool = True,
+                 specialize: bool = True) -> CompiledPlan:
+    """Cluster once, lower once: build the fused program for one structure.
+
+    ``specialize`` enables gate-class-aware lowering: diagonal and
+    permutation (monomial) clusters bypass the dense matvec for phase-vector
+    / index-map fast paths, and diagonal runs may fuse up to
+    :func:`resolve_diag_f` qubits wide.  The dense no-fusion baseline
+    (``f_eff == 0``) is never specialized — it stays the naive oracle.
+    """
     t0 = time.perf_counter()
     dummy = template.bind(np.zeros(template.num_params))
     ops = template.ops
     f_eff = resolve_f(f, target, template.n, fuse, backend)
+    specialize = bool(specialize and f_eff)
     if f_eff:
-        prep, specs = cluster_gates(dummy.gates, f_eff)
-        items = [_lower_cluster(s, prep, ops) for s in specs]
+        diag_f = resolve_diag_f(f_eff, target, template.n) if specialize \
+            else None
+        classes = ([PARAM_OP_CLASS.get(op.kind) for op in ops]
+                   if specialize else None)
+        prep, specs = cluster_gates(dummy.gates, f_eff, diag_f=diag_f,
+                                    classes=classes)
+        diag_cap = diag_f if specialize else None
+        items = [it for s in specs
+                 if (it := _lower_cluster(s, prep, ops,
+                                          diag_cap=diag_cap)) is not None]
+        if specialize and backend != "pallas":
+            items = _coalesce_diag_runs(items)
     else:
         items = [_lower_single(op, g) for op, g in zip(ops, dummy.gates)]
     plan = CompiledPlan(template=template, backend=backend, target=target,
-                        f=f_eff, interpret=interpret, items=items)
+                        f=f_eff, interpret=interpret, items=items,
+                        specialize=specialize)
     plan.compile_seconds = time.perf_counter() - t0
     return plan
 
@@ -340,6 +814,7 @@ class CacheStats:
     misses: int = 0
     compiles: int = 0
     evictions: int = 0
+    batch_evictions: int = 0     # per-plan batched-executable LRU evictions
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -355,20 +830,23 @@ class PlanCache:
 
     @staticmethod
     def plan_key(template: CircuitTemplate, *, backend: str, target: Target,
-                 f: int | None, fuse: bool, interpret: bool) -> tuple:
+                 f: int | None, fuse: bool, interpret: bool,
+                 specialize: bool = True) -> tuple:
         f_eff = resolve_f(f, target, template.n, fuse, backend)
         return (template.structure_key(), backend, target.name, f_eff,
-                interpret and backend == "pallas")
+                interpret and backend == "pallas",
+                bool(specialize and f_eff))
 
     def get_or_compile(self, template: CircuitTemplate | Circuit, *,
                        backend: str, target: Target, f: int | None = None,
-                       fuse: bool = True,
-                       interpret: bool = True) -> CompiledPlan:
+                       fuse: bool = True, interpret: bool = True,
+                       specialize: bool = True) -> CompiledPlan:
         if isinstance(template, Circuit):
             from repro.engine.template import template_of
             template = template_of(template)
         key = self.plan_key(template, backend=backend, target=target, f=f,
-                            fuse=fuse, interpret=interpret)
+                            fuse=fuse, interpret=interpret,
+                            specialize=specialize)
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
@@ -376,13 +854,35 @@ class PlanCache:
             return plan
         self.stats.misses += 1
         plan = compile_plan(template, backend=backend, target=target, f=f,
-                            fuse=fuse, interpret=interpret)
+                            fuse=fuse, interpret=interpret,
+                            specialize=specialize)
+        plan.cache_stats = self.stats
         self.stats.compiles += 1
         self._plans[key] = plan
         while len(self._plans) > self.max_plans:
             self._plans.popitem(last=False)
             self.stats.evictions += 1
         return plan
+
+    def class_counts(self) -> dict:
+        """Aggregate fused-gate counts by lowering class over cached plans."""
+        counts = {"diagonal": 0, "permutation": 0, "general": 0}
+        for plan in self._plans.values():
+            for cls, c in plan.class_counts().items():
+                counts[cls] += c
+        return counts
+
+    def flops_summary(self) -> dict:
+        """Aggregate per-amplitude flops (actual vs generic lowering) over
+        cached plans — the estimated specialization win."""
+        generic = actual = 0.0
+        for plan in self._plans.values():
+            d = plan.flops_per_amp()
+            generic += d["flops_per_amp_generic"]
+            actual += d["flops_per_amp_actual"]
+        return {"flops_per_amp_generic": generic,
+                "flops_per_amp_actual": actual,
+                "flops_saved_frac": 1.0 - actual / generic if generic else 0.0}
 
     def __len__(self) -> int:
         return len(self._plans)

@@ -246,7 +246,8 @@ class BatchScheduler:
             ex = self.executor
             req._key = ex.cache.plan_key(
                 req.template, backend=ex.backend, target=ex.target, f=ex.f,
-                fuse=ex.fuse, interpret=ex.interpret)
+                fuse=ex.fuse, interpret=ex.interpret,
+                specialize=ex.specialize)
         return req._key
 
     def _take_groups(self) -> list[list[Request]]:
@@ -340,4 +341,8 @@ class BatchScheduler:
         out["inflight"] = len([b for b in self._window if not b.finalized])
         out.update({f"cache_{k}": v
                     for k, v in self.executor.stats.as_dict().items()})
+        # per-class fused-gate counts of the plans serving this traffic, so
+        # specialization coverage is trackable alongside throughput
+        out.update({f"gates_{cls}": c
+                    for cls, c in self.executor.class_counts().items()})
         return out

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.apply_gate.apply_gate import (
-    ViewPlan, apply_fused_gate_kernel, make_plan)
+    ViewPlan, apply_diag_gate_kernel, apply_fused_gate_kernel, make_plan)
 
 
 @functools.lru_cache(maxsize=1024)
@@ -47,6 +47,30 @@ def apply_fused_gate(data: jax.Array, n: int, v: int,
                      max_block_bytes=max_block_bytes)
     flat = data.reshape(2, 1 << n)
     out = apply_fused_gate_kernel(flat, u_re, u_im, plan, interpret=interpret)
+    return out.reshape(data.shape)
+
+
+def apply_phase_gate(data: jax.Array, n: int, v: int,
+                     qubits: tuple[int, ...], p_re: jax.Array | None,
+                     p_im: jax.Array | None, perm=None,
+                     interpret: bool = True,
+                     max_block_bytes: int = 1 << 20) -> jax.Array:
+    """Apply a diagonal/permutation (monomial) fused gate to the planar state.
+
+    data: f32[2, R, V] lane-tiled planar state (R * V = 2**n).
+    qubits: sorted cluster qubit ids; bit m of the ``2**w`` phase vector /
+    ``perm`` index map corresponds to ``qubits[m]``.
+    p_re/p_im: f32[2**w] phase planes (``None`` for a pure permutation).
+    perm: optional int[2**w] static index map, ``out[r] = phase[r] *
+    in[perm[r]]`` over the cluster rows.
+    """
+    qubits = tuple(qubits)
+    if qubits != tuple(sorted(qubits)):
+        raise ValueError(f"apply_phase_gate needs sorted qubits, got {qubits}")
+    plan = make_plan(n, qubits, (), max_block_bytes=max_block_bytes)
+    flat = data.reshape(2, 1 << n)
+    out = apply_diag_gate_kernel(flat, p_re, p_im, plan, perm=perm,
+                                 interpret=interpret)
     return out.reshape(data.shape)
 
 

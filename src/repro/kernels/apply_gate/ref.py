@@ -23,3 +23,24 @@ def apply_fused_gate_ref(data: jax.Array, n: int, v: int,
     psi = apply_gate_dense(psi, n, tuple(qubits), u, tuple(controls))
     out = jnp.stack([jnp.real(psi), jnp.imag(psi)]).astype(jnp.float32)
     return out.reshape(data.shape)
+
+
+def apply_phase_gate_ref(data: jax.Array, n: int, v: int,
+                         qubits: tuple[int, ...], p_re, p_im,
+                         perm=None) -> jax.Array:
+    """Oracle for the diag/perm kernel: materialize the monomial unitary
+    densely and route it through ``apply_gate_dense`` — a deliberately
+    different code path (no index maps, no phase broadcast)."""
+    import numpy as np
+    w = len(qubits)
+    dim = 1 << w
+    if p_re is None:
+        phase = np.ones(dim, np.complex64)
+    else:
+        phase = (np.asarray(p_re) + 1j * np.asarray(p_im)).astype(np.complex64)
+    src = np.arange(dim) if perm is None else np.asarray(perm)
+    u = np.zeros((dim, dim), np.complex64)
+    u[np.arange(dim), src] = phase
+    return apply_fused_gate_ref(data, n, v, tuple(qubits),
+                                jnp.asarray(u.real, jnp.float32),
+                                jnp.asarray(u.imag, jnp.float32))

@@ -56,7 +56,8 @@ def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
     return time.perf_counter() - t0
 
 
-def _print_report(rep: dict, dt: float, label: str, args) -> None:
+def _print_report(rep: dict, dt: float, label: str, args,
+                  cache=None) -> None:
     print(f"[{label}] served {rep['requests']} requests in {dt:.3f}s "
           f"({rep['requests'] / dt:.1f} circuits/s) "
           f"in {rep['batches']} batches, backend={args.backend}, "
@@ -70,6 +71,17 @@ def _print_report(rep: dict, dt: float, label: str, args) -> None:
         print(f"[{label}] no completed requests -> no latency stats")
     print(f"[{label}] plan cache: {rep['cache_compiles']} compiles, "
           f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
+    if getattr(args, "stats", False):
+        print(f"[{label}] fused gates by class: "
+              f"diagonal={rep.get('gates_diagonal', 0)} "
+              f"permutation={rep.get('gates_permutation', 0)} "
+              f"general={rep.get('gates_general', 0)}")
+        if cache is not None:
+            fl = cache.flops_summary()
+            print(f"[{label}] est. flops/amp: "
+                  f"{fl['flops_per_amp_actual']:.0f} specialized vs "
+                  f"{fl['flops_per_amp_generic']:.0f} generic "
+                  f"({fl['flops_saved_frac'] * 100:.1f}% saved)")
 
 
 def main(argv=None):
@@ -92,6 +104,12 @@ def main(argv=None):
                          "oldest request has waited this long (default: "
                          "only drain dispatches)")
     ap.add_argument("--f", type=int, default=None)
+    ap.add_argument("--specialize", default="on", choices=["on", "off"],
+                    help="gate-class-specialized plan lowering (diagonal/"
+                         "permutation fast paths)")
+    ap.add_argument("--stats", action="store_true",
+                    help="report per-class fused-gate counts and the "
+                         "estimated flops saved by specialization")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare-sync", action="store_true",
                     help="also run the same traffic through a fresh "
@@ -100,7 +118,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     executor = BatchExecutor(target=get_target(args.target),
-                             backend=args.backend, f=args.f)
+                             backend=args.backend, f=args.f,
+                             specialize=args.specialize == "on")
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
                            max_wait_ms=args.max_wait_ms)
@@ -109,12 +128,13 @@ def main(argv=None):
 
     dt = _serve(sched, traffic, args.mode)
     rep = sched.report()
-    _print_report(rep, dt, args.mode, args)
+    _print_report(rep, dt, args.mode, args, cache=executor.cache)
 
     if args.compare_sync:
         sync_sched = BatchScheduler(
             BatchExecutor(target=get_target(args.target),
                           backend=args.backend, f=args.f,
+                          specialize=args.specialize == "on",
                           cache=executor.cache),   # warm plans: isolate overlap
             max_batch=args.max_batch)
         before = executor.cache.stats.as_dict()   # shared cache: report deltas
@@ -122,7 +142,7 @@ def main(argv=None):
         sync_rep = sync_sched.report()
         for k, v in before.items():
             sync_rep[f"cache_{k}"] -= v
-        _print_report(sync_rep, sync_dt, "sync", args)
+        _print_report(sync_rep, sync_dt, "sync", args, cache=executor.cache)
         print(f"{args.mode}(cold) vs sync(warm) speedup: "
               f"{sync_dt / dt:.2f}x "
               f"(the {args.mode} time above includes its "

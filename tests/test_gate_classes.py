@@ -1,0 +1,236 @@
+"""Gate-class-specialized lowering: classification, fast-path equivalence
+against the dense oracle, wide diagonal clusters, and the batched-program
+LRU bound."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circuits as C
+from repro.core import gates as G
+from repro.core.fusion import cluster_gates, fusion_stats, fuse_circuit
+from repro.core.gates import gate_class, monomial_decompose
+from repro.core.target import CPU_TEST
+from repro.engine import (BatchExecutor, PlanCache, qaoa_template,
+                          template_of)
+from repro.engine.plan import (PARAM_OP_CLASS, compile_plan, resolve_diag_f,
+                               resolve_f)
+from repro.engine.template import CircuitTemplate, TemplateOp, fixed_op
+
+
+def _dense(state) -> np.ndarray:
+    return np.asarray(state.to_dense())
+
+
+def _oracle(template, params=None):
+    """Unfused dense execution — the apply_gate_dense reference path."""
+    return _dense(compile_plan(template, backend="dense", target=CPU_TEST,
+                               fuse=False).run(params=params))
+
+
+# -- classification ------------------------------------------------------------
+
+DIAGONAL_GATES = [G.z(0), G.s(0), G.t(0), G.rz(0, 0.7), G.cz(1, 0),
+                  G.cphase(1, 0, 0.4), G.mcz((1, 2), 0)]
+PERMUTATION_GATES = [G.x(0), G.y(0), G.cnot(1, 0), G.swap(0, 1),
+                     G.toffoli(1, 2, 0), G.mcx((1, 2), 0)]
+GENERAL_GATES = [G.h(0), G.rx(0, 0.5), G.ry(0, 0.5), G.fsim(0, 1, 0.3, 0.4),
+                 G.su4(0, 1, np.random.default_rng(0))]
+
+
+def test_every_library_gate_is_classified():
+    for g in DIAGONAL_GATES:
+        assert g.gate_class == "diagonal", g.name
+    for g in PERMUTATION_GATES:
+        assert g.gate_class == "permutation", g.name
+    for g in GENERAL_GATES:
+        assert g.gate_class == "general", g.name
+    # rotation classes must be angle-independent where the lowering assumes
+    # it: rz is diagonal at every angle, rx/ry are general in the plan
+    # compiler even though rx(0) == I
+    for theta in (0.0, 0.3, np.pi):
+        assert G.rz(0, theta).gate_class == "diagonal"
+    assert PARAM_OP_CLASS["rz"] == "diagonal"
+    assert PARAM_OP_CLASS["rx"] == PARAM_OP_CLASS["ry"] == "general"
+
+
+def test_monomial_decompose_roundtrip():
+    for g in DIAGONAL_GATES + PERMUTATION_GATES:
+        perm, phase = monomial_decompose(g.matrix)
+        dim = g.matrix.shape[0]
+        rebuilt = np.zeros((dim, dim), np.complex64)
+        rebuilt[np.arange(dim), perm] = phase
+        np.testing.assert_allclose(rebuilt, g.matrix, atol=1e-6)
+    with pytest.raises(ValueError):
+        monomial_decompose(G.H_M)
+
+
+# -- specialized plans match the dense oracle ---------------------------------
+
+BACKENDS = ("planar", "pallas")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_qaoa_specialized_matches_oracle(backend):
+    """QAOA cost layers refine to diagonal items; results stay oracle-exact
+    up to fp32 tolerance."""
+    t = qaoa_template(8, 2)
+    rng = np.random.default_rng(3)
+    params = rng.uniform(-np.pi, np.pi, t.num_params)
+    plan = compile_plan(t, backend=backend, target=CPU_TEST, specialize=True)
+    assert plan.class_counts()["diagonal"] > 0
+    np.testing.assert_allclose(_dense(plan.run(params=params)),
+                               _oracle(t, params), atol=2e-5)
+
+
+def _random_class_circuit(rng, n, num_gates, mix):
+    """Random circuit drawn from a class mix: diag / perm / general pools."""
+    gates = []
+    for _ in range(num_gates):
+        q = int(rng.integers(0, n))
+        q2 = int((q + 1 + rng.integers(0, n - 1)) % n)
+        kind = mix[int(rng.integers(0, len(mix)))]
+        if kind == "diag":
+            gates.append([G.z(q), G.s(q), G.t(q), G.rz(q, float(rng.uniform(0, 6))),
+                          G.cz(q, q2), G.cphase(q, q2, float(rng.uniform(0, 3)))]
+                         [int(rng.integers(0, 6))])
+        elif kind == "perm":
+            gates.append([G.x(q), G.y(q), G.cnot(q, q2), G.swap(q, q2)]
+                         [int(rng.integers(0, 4))])
+        else:
+            gates.append([G.h(q), G.rx(q, float(rng.uniform(0, 6))),
+                          G.ry(q, float(rng.uniform(0, 6)))]
+                         [int(rng.integers(0, 3))])
+    return C.Circuit(n, gates)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mix=st.sampled_from([("diag",), ("perm",), ("diag", "perm"),
+                            ("diag", "perm", "general")]))
+def test_random_class_circuits_match_oracle(seed, mix):
+    """Property: specialized lowering is equivalent to the dense oracle on
+    random diag-only / perm-only / mixed circuits (controlled variants
+    included via cz, cphase, cnot)."""
+    rng = np.random.default_rng(seed)
+    circ = _random_class_circuit(rng, 6, 18, mix)
+    t = template_of(circ)
+    ref = _oracle(t)
+    for backend in BACKENDS:
+        plan = compile_plan(t, backend=backend, target=CPU_TEST,
+                            specialize=True)
+        np.testing.assert_allclose(_dense(plan.run()), ref, atol=2e-5,
+                                   err_msg=f"{backend} mix={mix}")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_parameterized_diag_under_vmap(backend):
+    """Rz/ZZ phase vectors trace correctly under vmap: a batched sweep of a
+    cost-layer-heavy template matches per-circuit oracle runs."""
+    n = 6
+    edges = [(i, (i + 1) % n) for i in range(n)]
+    ops = [fixed_op(G.h(q)) for q in range(n)]
+    for layer in range(2):
+        for a, b in edges:
+            ops.append(fixed_op(G.cnot(a, b)))
+            ops.append(TemplateOp("rz", (b,), param=layer, scale=2.0,
+                                  name="rz"))
+            ops.append(fixed_op(G.cnot(a, b)))
+    t = CircuitTemplate(n, tuple(ops), num_params=2, name="zzstack")
+    rng = np.random.default_rng(11)
+    pm = rng.uniform(-np.pi, np.pi, (6, 2)).astype(np.float32)
+    ex = BatchExecutor(backend=backend, specialize=True, cache=PlanCache())
+    states = ex.run_batch(t, pm)
+    assert ex.plan_for(t).class_counts()["diagonal"] > 0
+    for b in range(pm.shape[0]):
+        np.testing.assert_allclose(_dense(states[b]), _oracle(t, pm[b]),
+                                   atol=2e-5)
+
+
+def test_grover_specialized_matches_oracle():
+    t = template_of(C.grover(6, iterations=2))
+    ref = _oracle(t)
+    for backend in BACKENDS:
+        plan = compile_plan(t, backend=backend, target=CPU_TEST,
+                            specialize=True)
+        np.testing.assert_allclose(_dense(plan.run()), ref, atol=2e-5)
+
+
+def test_specialize_off_matches_on():
+    t = qaoa_template(7, 2)
+    rng = np.random.default_rng(5)
+    params = rng.uniform(-np.pi, np.pi, t.num_params)
+    on = compile_plan(t, backend="planar", target=CPU_TEST, specialize=True)
+    off = compile_plan(t, backend="planar", target=CPU_TEST, specialize=False)
+    assert sum(off.class_counts().values()) == off.num_fused_gates
+    assert off.class_counts()["diagonal"] == 0
+    np.testing.assert_allclose(_dense(on.run(params=params)),
+                               _dense(off.run(params=params)), atol=2e-5)
+
+
+def test_specialize_is_part_of_plan_key():
+    cache = PlanCache()
+    t = qaoa_template(5, 2)
+    cache.get_or_compile(t, backend="planar", target=CPU_TEST,
+                         specialize=True)
+    cache.get_or_compile(t, backend="planar", target=CPU_TEST,
+                         specialize=False)
+    assert cache.stats.compiles == 2
+
+
+# -- wide diagonal clusters ----------------------------------------------------
+
+def test_diag_clusters_exceed_general_degree():
+    """Diagonal runs fuse past f, capped at the n - lane_qubits row budget."""
+    n = 12
+    t = qaoa_template(n, 1)
+    f_eff = resolve_f(None, CPU_TEST, n, True, "planar")
+    diag_cap = resolve_diag_f(f_eff, CPU_TEST, n)
+    assert diag_cap == n - CPU_TEST.lane_qubits  # documented width cap
+    assert diag_cap > f_eff
+    classes = [PARAM_OP_CLASS.get(op.kind) for op in t.ops]
+    dummy = t.bind(np.zeros(t.num_params))
+    prep, specs = cluster_gates(dummy.gates, f_eff, diag_f=diag_cap,
+                                classes=classes)
+    wide = [s for s in specs if len(s.qubits) > f_eff]
+    assert wide, "expected diagonal clusters wider than f"
+    assert all(s.cls in ("diagonal", "permutation") for s in wide)
+    assert max(len(s.qubits) for s in wide) <= diag_cap
+    # and the lowered plan still matches the oracle
+    rng = np.random.default_rng(7)
+    params = rng.uniform(-np.pi, np.pi, t.num_params)
+    plan = compile_plan(t, backend="planar", target=CPU_TEST, specialize=True)
+    np.testing.assert_allclose(_dense(plan.run(params=params)),
+                               _oracle(t, params), atol=2e-5)
+
+
+def test_fusion_stats_reports_classes():
+    circ = C.qft(8)
+    fused = fuse_circuit(circ.gates, 3)
+    stats = fusion_stats(circ.gates, fused)
+    counts = stats["class_counts"]
+    assert set(counts) == {"diagonal", "permutation", "general"}
+    assert sum(counts.values()) == stats["gates_after"]
+    assert 0.0 <= stats["flops_saved_frac"] <= 1.0
+    assert (stats["flops_per_amp_specialized"]
+            <= stats["flops_per_amp_generic"])
+
+
+# -- batched-program LRU -------------------------------------------------------
+
+def test_batched_program_cache_bounded():
+    """Distinct batch sizes may not grow CompiledPlan._batched without
+    limit; evictions surface in CacheStats.batch_evictions."""
+    cache = PlanCache()
+    t = qaoa_template(4, 1)
+    plan = cache.get_or_compile(t, backend="planar", target=CPU_TEST)
+    rng = np.random.default_rng(0)
+    n_sizes = plan.MAX_BATCHED_PROGRAMS + 3
+    for b in range(1, n_sizes + 1):
+        plan.run_batch_raw(rng.uniform(-1, 1, (b, t.num_params)))
+    assert len(plan._batched) == plan.MAX_BATCHED_PROGRAMS
+    assert plan.batch_evictions == n_sizes - plan.MAX_BATCHED_PROGRAMS
+    assert cache.stats.batch_evictions == plan.batch_evictions
+    # LRU: the most recent sizes survived and re-run without a rebuild
+    compiles = plan.batch_compiles
+    plan.run_batch_raw(rng.uniform(-1, 1, (n_sizes, t.num_params)))
+    assert plan.batch_compiles == compiles
