@@ -14,7 +14,8 @@ import traceback
 from benchmarks import (batch_throughput, fig6_overall, fig10_fusion,
                         fig11_ai, fig12_ablation, fig13_scaling,
                         fig14_projection, gate_classes, roofline,
-                        serve_mixed, tab3_gate_ops, tab4_vectorization)
+                        serve_mixed, sharded_batch, tab3_gate_ops,
+                        tab4_vectorization)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -29,6 +30,7 @@ MODULES = {
     "batch": batch_throughput,
     "serve": serve_mixed,
     "classes": gate_classes,
+    "sharded": sharded_batch,
 }
 
 

@@ -32,7 +32,217 @@ from repro.core import apply as A
 from repro.core import fusion as F
 from repro.core.circuits import Circuit
 from repro.core.gates import Gate
-from repro.core.target import Target
+from repro.core.target import Target, row_budget
+
+# Mesh axis names used by the engine's sharded plan execution
+# (``CompiledPlan.run_sharded_batch_raw``): the batch axis shards whole
+# states of a parameter sweep, the state axis shards the row dimension of
+# each state (its bits become the top "global" qubit positions).
+BATCH_AXIS = "shard_batch"
+STATE_AXIS = "shard_state"
+
+# Per-device row budget for the batch-first spill policy: a 26-qubit planar
+# state is 2 * 4 B * 2**26 = 512 MiB of f32 planes per device — a sensible
+# single-device ceiling for both the CPU container and one TPU core's HBM
+# slice.  Overridable per executor via ``max_local_qubits``.
+DEFAULT_MAX_LOCAL_QUBITS = 26
+
+
+# -- reusable collective machinery --------------------------------------------
+#
+# ``swap_block`` / ``pick_victim`` are the qubit-block-swap primitives shared
+# by :class:`DistributedSimulator` (gate-by-gate path) and the engine's
+# sharded plan execution (``repro.engine.plan``): one tiled ``all_to_all``
+# exchanges a mesh axis's bit block with a contiguous block of local bits,
+# and Belady victim selection decides *which* local block so that the lazily
+# tracked logical->physical permutation amortizes collectives across runs of
+# gates on the same formerly-global qubits.
+
+def swap_block(data: jax.Array, axis: str, n_local: int, local_lo: int,
+               a_bits: int) -> jax.Array:
+    """``all_to_all`` swap of mesh-axis bits with the local bit block
+    ``[local_lo, local_lo + a_bits)``.
+
+    ``data``'s trailing dimensions must flatten to ``2**n_local`` local
+    amplitudes (the planar ``(R_local, V)`` tile or any reshape of it);
+    arbitrary leading axes (planes, batch) are preserved, so the same
+    primitive serves the single-state and the batched sharded paths.
+    """
+    shape = data.shape
+    pre = 1 << (n_local - local_lo - a_bits)
+    mid = 1 << a_bits
+    post = 1 << local_lo
+    x = data.reshape(-1, pre, mid, post)
+    x = jax.lax.all_to_all(x, axis, split_axis=2, concat_axis=2, tiled=True)
+    return x.reshape(shape)
+
+
+def pick_victim(needed: Sequence[int], a_bits: int, top: int,
+                score=None) -> int:
+    """Contiguous ``a_bits``-wide local bit block in ``[0, top)`` avoiding
+    every position in ``needed``; with a ``score`` function, the candidate
+    whose resident logical qubits are needed furthest in the future wins
+    (Belady eviction — minimizes swap thrash).
+
+    Lane bits are legitimate victims too: a device-bit block swapped into
+    lane positions simply routes later gates on those logical qubits through
+    the lane path.  Raises ``ValueError`` when no block fits.
+    """
+    best = None
+    for blk in range(top - a_bits, -1, -1):
+        if any(blk <= p < blk + a_bits for p in needed):
+            continue
+        if score is None:
+            return blk
+        s = score(blk)
+        if best is None or s > best[0]:
+            best = (s, blk)
+    if best is None:
+        raise ValueError("no local bit block available for global-qubit swap")
+    return best[1]
+
+
+def swap_perm(perm: Sequence[int], block_lo: int, local_lo: int,
+              a_bits: int) -> list[int]:
+    """Update a logical->physical permutation for a block swap exchanging
+    positions ``[block_lo, block_lo + a_bits)`` with ``[local_lo, ...)``."""
+    remap = {}
+    for o in range(a_bits):
+        remap[block_lo + o] = local_lo + o
+        remap[local_lo + o] = block_lo + o
+    return [remap.get(p, p) for p in perm]
+
+
+# -- mesh layout planning ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How the engine splits a device mesh between batch and state sharding.
+
+    ``batch_shards`` devices split the batch axis of a parameter sweep;
+    ``2**state_bits`` devices shard each state's row axis (mpiQulacs-style:
+    the top ``state_bits`` physical qubit positions select the device).
+    """
+
+    batch_shards: int = 1
+    state_bits: int = 0
+
+    @property
+    def state_shards(self) -> int:
+        return 1 << self.state_bits
+
+    @property
+    def devices(self) -> int:
+        return self.batch_shards << self.state_bits
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.batch_shards, self.state_shards)
+
+    @property
+    def is_single(self) -> bool:
+        return self.devices == 1
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << (x - 1).bit_length() if x >= 2 else 1
+
+
+def max_state_bits(n: int, target: Target) -> int:
+    """Largest state-sharding degree an ``n``-qubit plan supports.
+
+    Constraints, in local-qubit terms (``n_local = n - s``): the
+    fused-cluster width cap must stay >= 2 *after* reserving an ``s``-bit
+    victim block for qubit-block swaps (``n_local - max(s, lane_qubits) >=
+    2``), and ``n_local >= 2 s`` so a victim window always exists next to
+    any (compacted) set of at most ``s`` protected bit positions — the
+    guarantee the trailing permutation-restore swaps rely on.
+    """
+    s = 0
+    while (n - (s + 1) - max(s + 1, target.lane_qubits) >= 2
+           and n - (s + 1) >= 2 * (s + 1)):
+        s += 1
+    return s
+
+
+def plan_shard_layout(n: int, batch: int | None, devices: int,
+                      target: Target,
+                      max_local_qubits: int | None = None) -> ShardSpec:
+    """Batch-first device split: shard the batch axis, and spill into state
+    sharding only when ``n`` exceeds the per-device row budget.
+
+    ``batch=None`` means a single-circuit run (``Simulator.run``): there is
+    no batch axis to shard, so by default the whole mesh goes to state
+    sharding (clamped by :func:`max_state_bits`) — that is what passing a
+    mesh to a single-circuit run asks for — unless ``max_local_qubits`` is
+    explicitly set, in which case the spill rule applies there too.
+    Otherwise ``state_bits`` is the smallest degree that brings the
+    per-device sub-state under ``max_local_qubits`` (default
+    :data:`DEFAULT_MAX_LOCAL_QUBITS`), and the remaining devices shard the
+    batch axis — capped at the next power of two of ``batch`` so a small
+    sweep is not padded across the whole mesh.
+    """
+    if devices < 1 or (devices & (devices - 1)):
+        raise ValueError(f"device count must be a power of two, got {devices}")
+    dbits = devices.bit_length() - 1
+    cap = min(dbits, max_state_bits(n, target))
+    if batch is None:
+        state_bits = cap if max_local_qubits is None else \
+            min(cap, max(0, n - max_local_qubits))
+        batch_shards = 1
+    else:
+        max_local = (DEFAULT_MAX_LOCAL_QUBITS if max_local_qubits is None
+                     else max_local_qubits)
+        state_bits = min(cap, max(0, n - max_local))
+        batch_shards = min(devices >> state_bits,
+                           _pow2_ceil(max(1, batch)))
+    if max_local_qubits is not None and n - state_bits > max_local_qubits:
+        # the split is best-effort (bounded by device count and
+        # max_state_bits), but an explicitly configured memory budget
+        # being exceeded must not pass silently
+        import warnings
+        warnings.warn(
+            f"shard layout cannot meet max_local_qubits={max_local_qubits}: "
+            f"n={n} over {devices} devices leaves {n - state_bits} local "
+            f"qubits per device", RuntimeWarning, stacklevel=2)
+    return ShardSpec(batch_shards=batch_shards, state_bits=state_bits)
+
+
+def device_pool(mesh) -> list:
+    """Resolve a ``mesh=`` option (device count or ``jax.sharding.Mesh``)
+    to the device list the layout planner splits.
+
+    The one place the engine validates and normalizes mesh inputs —
+    ``BatchExecutor`` and ``Simulator`` both route through it, so their
+    sharded paths can never drift on what a mesh option means.  The count
+    must be a power of two (the layout planner splits power-of-two grids);
+    a non-conforming request is rejected rather than silently truncated.
+    """
+    if isinstance(mesh, int):
+        avail = jax.devices()
+        if not 1 <= mesh <= len(avail):
+            raise ValueError(
+                f"mesh={mesh} devices requested, {len(avail)} available")
+        pool = avail[:mesh]
+    else:                          # a jax.sharding.Mesh: reuse its devices
+        pool = list(np.asarray(mesh.devices).flat)
+    if not pool or len(pool) & (len(pool) - 1):
+        raise ValueError(
+            f"mesh device count must be a power of two, got {len(pool)}")
+    return pool
+
+
+def make_sim_mesh(spec: ShardSpec, devices: Sequence | None = None) -> Mesh:
+    """Build the two-axis ``(BATCH_AXIS, STATE_AXIS)`` mesh for a
+    :class:`ShardSpec` from the first ``spec.devices`` available devices."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < spec.devices:
+        raise ValueError(
+            f"shard layout needs {spec.devices} devices "
+            f"({spec.batch_shards} batch x {spec.state_shards} state), "
+            f"have {len(devs)}")
+    grid = np.array(devs[:spec.devices]).reshape(spec.shape)
+    return Mesh(grid, (BATCH_AXIS, STATE_AXIS))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +311,9 @@ class DistributedSimulator:
     def prepare(self, circuit: Circuit) -> list[Gate]:
         if not self.fuse:
             return list(circuit.gates)
-        f = max(2, min(self.f, self.n_local - self.v))
+        # width cap: the *local* sub-state's row budget (see
+        # repro.core.target.row_budget for the canonical rule)
+        f = max(2, min(self.f, row_budget(self.n_local, self.target)))
         return F.fuse_circuit(circuit.gates, f)
 
     def build_step(self, circuit: Circuit):
@@ -167,11 +379,7 @@ class DistributedSimulator:
                     data = self._swap_block(
                         data, layout.axes[ai], lo, tgt, a_bits)
                     # update permutation: positions lo..hi <-> tgt..
-                    remap = {}
-                    for o in range(a_bits):
-                        remap[lo + o] = tgt + o
-                        remap[tgt + o] = lo + o
-                    perm = [remap.get(p, p) for p in perm]
+                    perm = swap_perm(perm, lo, tgt, a_bits)
                     swaps += 1
                     phys = [perm[q] for q in g.qubits]
                     cphys = [perm[q] for q in g.controls]
@@ -210,41 +418,13 @@ class DistributedSimulator:
 
     def _pick_victim(self, needed: list[int], a_bits: int,
                      score=None) -> int:
-        """Contiguous local bit block not used by the current gate; with a
-        ``score`` function, the candidate whose resident logical qubits are
-        needed furthest in the future wins (Belady eviction).
-
-        Lane bits are legitimate victims too: a device-bit block swapped into
-        lane positions simply routes later gates on those logical qubits
-        through the lane path.
-        """
-        top = self.n - self.d
-        best = None
-        for blk in range(top - a_bits, -1, -1):
-            if any(blk <= p < blk + a_bits for p in needed):
-                continue
-            if score is None:
-                return blk
-            s = score(blk)
-            if best is None or s > best[0]:
-                best = (s, blk)
-        if best is None:
-            raise ValueError(
-                "no local bit block available for global-qubit swap")
-        return best[1]
+        """Module-level :func:`pick_victim` over this simulator's local bits."""
+        return pick_victim(needed, a_bits, self.n - self.d, score=score)
 
     def _swap_block(self, data: jax.Array, axis: str, axis_lo: int,
                     local_lo: int, a_bits: int) -> jax.Array:
-        """all_to_all swap of mesh-axis bits with local bits [local_lo, ...)."""
-        n_loc = self.n - self.d
-        # flat local index space; expose bits [local_lo, local_lo + a_bits)
-        pre = 1 << (n_loc - local_lo - a_bits)
-        mid = 1 << a_bits
-        post = 1 << local_lo
-        x = data.reshape(2, pre, mid, post)
-        x = jax.lax.all_to_all(x, axis, split_axis=2, concat_axis=2,
-                               tiled=True)
-        return x.reshape(data.shape)
+        """Module-level :func:`swap_block` over this simulator's local bits."""
+        return swap_block(data, axis, self.n - self.d, local_lo, a_bits)
 
     # -- end-to-end helper --------------------------------------------------
     def run(self, circuit: Circuit, state: jax.Array | None = None):

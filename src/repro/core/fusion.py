@@ -182,7 +182,11 @@ def cluster_gates(gates: Sequence[Gate], f: int,
     ``diag_f`` qubits instead of ``f`` — a diagonal/monomial cluster composes
     into a length-``2**w`` phase vector (plus a static index map), never a
     dense matrix, so widening it raises fusion reduction *without* raising
-    flops.  ``classes`` optionally overrides the per-gate structural class
+    flops.  Callers derive ``diag_f`` from the canonical row-budget rule
+    (:func:`repro.core.target.row_budget` via
+    :func:`repro.engine.plan.resolve_diag_f`) — this function never computes
+    the cap itself, so clustering and lowering cannot disagree about it.
+    ``classes`` optionally overrides the per-gate structural class
     (aligned with ``gates``; ``None`` entries fall back to classifying the
     preprocessed matrix) — the engine uses it to mark parameterized rotations
     whose class is angle-independent (rz/phase: diagonal) or angle-dependent

@@ -36,6 +36,8 @@ class Simulator:
     interpret: bool = True         # Pallas interpret mode (CPU container)
     specialize: bool = True        # gate-class-specialized plan lowering
     plan_cache: object | None = None  # engine.PlanCache; None = shared global
+    mesh: object | None = None     # device count | jax Mesh: sharded plan runs
+    max_local_qubits: int | None = None  # per-device row budget (spill knob)
 
     def __post_init__(self):
         if self.f is None:
@@ -43,6 +45,37 @@ class Simulator:
         if self.plan_cache is None:
             from repro.engine.plan import GLOBAL_PLAN_CACHE
             self.plan_cache = GLOBAL_PLAN_CACHE
+        self._device_pool = None
+        self._meshes = {}
+        if self.mesh is not None:
+            if self.backend != "planar":
+                raise ValueError(
+                    "mesh execution lowers plans with the planar "
+                    f"applications; use backend='planar' (got {self.backend!r})")
+            from repro.core import distributed as D
+            self._device_pool = D.device_pool(self.mesh)
+
+    # -- sharding -------------------------------------------------------------
+    def _shard_spec(self, n: int):
+        """Single-circuit runs have no batch axis to shard, so the whole
+        mesh goes to state sharding (``plan_shard_layout`` with
+        ``batch=None``, clamped by ``max_state_bits``) — unless
+        ``max_local_qubits`` is explicitly set, in which case states that
+        fit one device stay unsharded (the spill rule)."""
+        from repro.core import distributed as D
+        if self._device_pool is None:
+            return D.ShardSpec()
+        return D.plan_shard_layout(n, None, len(self._device_pool),
+                                   self.target,
+                                   max_local_qubits=self.max_local_qubits)
+
+    def _mesh_for(self, spec):
+        from repro.core import distributed as D
+        mesh = self._meshes.get(spec)
+        if mesh is None:
+            mesh = D.make_sim_mesh(spec, self._device_pool)
+            self._meshes[spec] = mesh
+        return mesh
 
     # -- preparation ----------------------------------------------------------
     def prepare(self, circuit: Circuit) -> list[Gate]:
@@ -53,13 +86,18 @@ class Simulator:
         return fuse_circuit(circuit.gates, f)
 
     def plan_for(self, circuit: Circuit):
-        """Resolve the compiled execution plan for a circuit or template."""
+        """Resolve the compiled execution plan for a circuit or template.
+
+        With a mesh configured, plans are compiled for the state-sharded
+        local sub-state and cached under mesh-shape-aware keys.
+        """
         if self.backend not in ("dense", "planar", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        spec = self._shard_spec(circuit.n)
         return self.plan_cache.get_or_compile(
             circuit, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
-            specialize=self.specialize)
+            specialize=self.specialize, state_bits=spec.state_bits)
 
     # -- execution ------------------------------------------------------------
     def run(self, circuit: Circuit, initial: SV.State | None = None,
@@ -68,9 +106,21 @@ class Simulator:
 
         Fusion + lowering + jit happen once per circuit *structure* through
         the plan cache (``repro.engine.plan``); repeat runs of the same
-        structure are single dispatches of the compiled program.
+        structure are single dispatches of the compiled program.  With
+        ``mesh=`` set the program executes state-sharded over the devices
+        (``CompiledPlan.run_sharded_batch_raw`` with a batch of one).
         """
-        return self.plan_for(circuit).run(params=params, initial=initial)
+        plan = self.plan_for(circuit)
+        spec = self._shard_spec(circuit.n)
+        if spec.is_single:
+            return plan.run(params=params, initial=initial)
+        if initial is not None:
+            raise ValueError("sharded runs build |0...0> on-device; "
+                             "initial states are not supported with mesh=")
+        pm = np.zeros((1, plan.num_params), np.float32) if params is None \
+            else np.asarray(params, np.float32).reshape(1, -1)
+        raw = plan.run_sharded_batch_raw(pm, self._mesh_for(spec))
+        return plan._wrap(raw[0])
 
     # -- observables -----------------------------------------------------------
     def expectation_z(self, state: SV.State, qubit: int) -> jax.Array:

@@ -44,6 +44,32 @@ class Target:
         return q
 
 
+def row_budget(n: int, target: Target) -> int:
+    """Row-qubit budget of an ``n``-qubit lane-tiled state: ``max(2, n -
+    target.lane_qubits)``.
+
+    This is the canonical statement of the rule — every fused-cluster width
+    cap derives from it.  The planar layout ``f32[2, R, V]`` keeps the bottom
+    ``lane_qubits`` state qubits resident in the vector-lane axis, so only
+    ``n - lane_qubits`` qubits live on addressable rows; a fused cluster wider
+    than that would force lane reshuffles the block layout cannot express.
+    The floor of 2 keeps two-qubit gates fusable even on tiny states (they
+    then span lane qubits, which the planar/pallas applications handle as
+    ordinary tensor axes, just without the wide-cluster fast paths).
+
+    Callers (keep these in lockstep — they must all agree on one number):
+
+    * :func:`repro.engine.plan.resolve_f` — general fused-cluster cap;
+    * :func:`repro.engine.plan.resolve_diag_f` — wide-diagonal cluster cap
+      handed to ``cluster_gates(diag_f=...)``;
+    * :meth:`repro.core.distributed.DistributedSimulator.prepare` and the
+      sharded plan path, which pass the *local* qubit count ``n -
+      state_bits`` — the per-device sub-state a ``shard_map`` block sees —
+      so sharded and planar plans can never drift apart.
+    """
+    return max(2, n - target.lane_qubits)
+
+
 # TPU v5e: 197 TFLOP/s bf16 MXU, ~1/4 for fp32 via MXU passes, 819 GB/s HBM,
 # 128 MiB VMEM (usable budget kept conservative), 50 GB/s/link ICI.
 TPU_V5E = Target(

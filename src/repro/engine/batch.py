@@ -6,6 +6,15 @@ one plan through the cache, then vmaps that plan's program over the batch —
 B structurally identical circuits for the price of one fusion pass and one
 XLA compile.  Shot batches (one circuit, many initial states) go through
 ``run_states``.
+
+With ``mesh=`` (a device count or a ``jax.sharding.Mesh``) batches execute
+sharded: the device split follows the batch-first policy of
+:func:`repro.core.distributed.plan_shard_layout` — shard the batch axis,
+and spill into state sharding (qubit-block-swap collectives inside the
+plan's ``shard_map`` program) only when ``n`` exceeds the per-device row
+budget ``max_local_qubits``.  Plans compiled for a sharded mesh are
+distinct cache entries (mesh-shape-aware plan keys), because the per-device
+sub-state shrinks their fused-cluster width caps.
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import distributed as D
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.target import CPU_TEST, Target
@@ -32,27 +42,86 @@ class BatchExecutor:
     f: int | None = None             # fusion degree; None = auto
     fuse: bool = True
     interpret: bool = True           # Pallas interpret mode
-    specialize: bool = True          # gate-class-specialized lowering
+    specialize: bool = True          # gate-class-specialized plan lowering
     cache: PlanCache | None = None
+    mesh: object | None = None       # device count | jax Mesh | None
+    max_local_qubits: int | None = None  # per-device row budget (spill knob)
 
     def __post_init__(self):
         if self.cache is None:
             self.cache = PlanCache()
+        self._meshes: dict = {}
+        self._device_pool: list | None = None
+        if self.mesh is None:
+            return
+        if self.backend != "planar":
+            raise ValueError(
+                "sharded execution lowers plans with the planar "
+                "applications inside shard_map; use backend='planar' "
+                f"(got {self.backend!r})")
+        self._device_pool = D.device_pool(self.mesh)
+
+    # -- shard layout ---------------------------------------------------------
+    @property
+    def mesh_devices(self) -> int:
+        """Total devices the executor may spread work over (1 = no mesh)."""
+        return len(self._device_pool) if self._device_pool else 1
+
+    def shard_spec_for(self, n: int, batch: int) -> D.ShardSpec:
+        """Batch-first device split for an ``n``-qubit, ``batch``-row sweep
+        (:func:`repro.core.distributed.plan_shard_layout`)."""
+        if self._device_pool is None:
+            return D.ShardSpec()
+        return D.plan_shard_layout(n, batch, self.mesh_devices, self.target,
+                                   max_local_qubits=self.max_local_qubits)
+
+    def _mesh_for(self, spec: D.ShardSpec):
+        mesh = self._meshes.get(spec)
+        if mesh is None:
+            mesh = D.make_sim_mesh(spec, self._device_pool)
+            self._meshes[spec] = mesh
+        return mesh
 
     # -- plan resolution ------------------------------------------------------
     def plan_for(self, template: CircuitTemplate | Circuit) -> CompiledPlan:
         if isinstance(template, Circuit):
             template = template_of(template)
+        spec = self.shard_spec_for(template.n, 1)
         return self.cache.get_or_compile(
             template, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
-            specialize=self.specialize)
+            specialize=self.specialize, state_bits=spec.state_bits)
+
+    def plan_key(self, template: CircuitTemplate | Circuit) -> tuple:
+        """The cache key :meth:`plan_for` resolves ``template`` to — the
+        grouping key schedulers batch requests by.  Mesh-shape-aware: a
+        structure that state-shards is a different plan (batch-only
+        sharding reuses the single-device lowering by design)."""
+        if isinstance(template, Circuit):
+            template = template_of(template)
+        spec = self.shard_spec_for(template.n, 1)
+        return self.cache.plan_key(
+            template, backend=self.backend, target=self.target, f=self.f,
+            fuse=self.fuse, interpret=self.interpret,
+            specialize=self.specialize, state_bits=spec.state_bits)
 
     # -- execution ------------------------------------------------------------
     def run(self, template: CircuitTemplate | Circuit, params=None,
             initial: SV.State | None = None) -> SV.State:
-        """Single binding — sequential baseline / batch-of-one path."""
-        return self.plan_for(template).run(params=params, initial=initial)
+        """Single binding — sequential baseline / batch-of-one path.
+
+        With a mesh configured, this routes through the sharded dispatch
+        path (a batch of one), so the same executor never mixes execution
+        semantics between ``run`` and ``dispatch_batch``.
+        """
+        if self._device_pool is None:
+            return self.plan_for(template).run(params=params, initial=initial)
+        if isinstance(template, Circuit):
+            template = template_of(template)
+        pm = (np.zeros((1, template.num_params), np.float32) if params is None
+              else np.asarray(params, np.float32).reshape(1, -1))
+        plan, raw = self.dispatch_batch(template, pm, initial=initial)
+        return plan.wrap_batch(raw)[0]
 
     def run_batch(self, template: CircuitTemplate | Circuit,
                   params_matrix, initial: SV.State | None = None,
@@ -71,10 +140,24 @@ class BatchExecutor:
         The host returns as soon as the computation is enqueued, so the
         caller can stage the next batch while this one executes; retire with
         :meth:`finalize_batch` (or ``jax.block_until_ready`` + ``wrap_batch``).
+        With a mesh configured the dispatch shards the batch (and, when the
+        spill policy says so, the state rows) over the devices.
         """
         params_matrix = np.atleast_2d(np.asarray(params_matrix, np.float32))
+        if isinstance(template, Circuit):
+            template = template_of(template)
         plan = self.plan_for(template)
-        return plan, plan.run_batch_raw(params_matrix, initial=initial)
+        if self._device_pool is None:
+            return plan, plan.run_batch_raw(params_matrix, initial=initial)
+        if initial is not None:
+            raise ValueError(
+                "sharded dispatch builds |0...0> on-device; initial states "
+                "are not supported with mesh=")
+        spec = self.shard_spec_for(template.n, params_matrix.shape[0])
+        if spec.is_single:
+            return plan, plan.run_batch_raw(params_matrix)
+        return plan, plan.run_sharded_batch_raw(params_matrix,
+                                                self._mesh_for(spec))
 
     def finalize_batch(self, plan: CompiledPlan, raw,
                        count: int | None = None) -> list[SV.State]:
@@ -87,7 +170,8 @@ class BatchExecutor:
     def run_states(self, template: CircuitTemplate | Circuit,
                    initials: Sequence[SV.State], params=None,
                    ) -> list[SV.State]:
-        """Shot-batch path: one circuit over B initial states."""
+        """Shot-batch path: one circuit over B initial states (always
+        single-device — caller-provided states bypass the sharded path)."""
         initials = list(initials)
         if not initials:
             raise ValueError("run_states needs at least one initial state "

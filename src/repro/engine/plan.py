@@ -12,9 +12,24 @@ compile time, so the per-binding work inside the program is a handful of
 replacing the per-gate ``_jit_*`` lru_caches the simulator used to keep:
 a parameter sweep of B structurally identical circuits costs one fusion pass
 and one XLA compile instead of B of each.
+
+Sharded execution (``CompiledPlan.run_sharded_batch_raw``) lowers the same
+plan items inside ``shard_map`` over a two-axis device mesh: the batch axis
+splits the parameter sweep, and the state axis shards each state's row
+dimension so the top ``state_bits`` physical qubit positions select the
+device (mpiQulacs-style, see ``repro.core.distributed``).  Items touching a
+global position are preceded by one qubit-block-swap ``all_to_all``; the
+logical->physical permutation is tracked at trace time and left in place
+(lazy unswapping), so a run of items on the same formerly-global qubits pays
+one collective — the collective analogue of the paper's fusion-based
+arithmetic-intensity adaptation (§IV-D).  Plans compiled for a sharded mesh
+use the *local* row budget ``n - state_bits - lane_qubits``
+(:func:`repro.core.target.row_budget`), which is why plan-cache keys are
+mesh-shape-aware.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import functools
@@ -26,12 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import apply as A
+from repro.core import distributed as D
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.fusion import choose_f, cluster_gates, realize_cluster
 from repro.core.gates import (Gate, expand_unitary, gate_class,
                               monomial_decompose)
-from repro.core.target import Target
+from repro.core.target import Target, row_budget
 from repro.engine.template import PARAM_KINDS, CircuitTemplate, TemplateOp
 
 # Structural class of a parameterized op, valid for *every* angle — the dummy
@@ -359,26 +375,44 @@ def _merge_diag_items(run: list[PlanItem]) -> PlanItem:
                     generic_flops=generic)
 
 
-def _coalesce_diag_runs(items: list[PlanItem]) -> list[PlanItem]:
+def _coalesce_diag_runs(items: list[PlanItem],
+                        max_width: int | None = None) -> list[PlanItem]:
     """Merge adjacent diagonal items (they commute and compose elementwise)
     into single full-width rotations: a QAOA cost stack that clustered into
     several row-budget-capped phase vectors becomes ONE state sweep — one
     cos/sin per distinct parameter, one rotation pass.  Used by the planar
     backend, whose diagonal application is pure elementwise arithmetic at
     any width; the pallas backend keeps per-item kernels so each block's
-    phase vector stays within the VMEM budget."""
+    phase vector stays within the VMEM budget.
+
+    ``max_width`` bounds the merged span (state-sharded plans pass the
+    diagonal width cap): an item's ``2**w`` phase vector is baked into the
+    executable on *every* device, so a full-width merge at large ``n``
+    would cost each device more constant memory than its local state block
+    — the very thing state sharding exists to avoid.
+    """
     out: list[PlanItem] = []
     run: list[PlanItem] = []
-    for item in items:
-        if item.kind == "diag":
-            run.append(item)
-            continue
+    run_qubits: set = set()
+
+    def flush():
         if run:
             out.append(run[0] if len(run) == 1 else _merge_diag_items(run))
-            run = []
+            run.clear()
+            run_qubits.clear()
+
+    for item in items:
+        if item.kind == "diag":
+            cand = run_qubits | set(item.qubits)
+            if run and max_width is not None and len(cand) > max_width:
+                flush()
+                cand = set(item.qubits)
+            run.append(item)
+            run_qubits |= cand
+            continue
+        flush()
         out.append(item)
-    if run:
-        out.append(run[0] if len(run) == 1 else _merge_diag_items(run))
+    flush()
     return out
 
 
@@ -448,6 +482,272 @@ def _full_perm_map(qubits: tuple[int, ...], n: int,
     return ((idx & ~mask) | scat).astype(np.int32)
 
 
+def _planar_special_step(item: PlanItem, n: int):
+    """Planar program step for a diag/perm item on an ``n``-qubit state.
+
+    Parameterized by ``n`` rather than the plan's qubit count so the sharded
+    path can build the same step on the ``n - state_bits``-qubit local block
+    a ``shard_map`` device sees (after relabeling the item's cluster bits
+    onto physical positions with :func:`_relabel_special_item`).
+    """
+    dims, bshape = _phase_broadcast_shapes(item.qubits, n)
+    has_phase = bool(item.phases)
+    const_phase = (item.np_phase_vector()
+                   if has_phase and not item.has_param_phase else None)
+    # permutation lowering: an XOR-mask permutation (X layers, composed
+    # bit flips) is a vectorized axis reversal — no gather at all;
+    # anything else is one static take over the flat amplitude axis
+    src = flip_dims = flip_axes = None
+    if item.perm is not None:
+        w = len(item.qubits)
+        mask = int(item.perm[0])
+        if np.array_equal(item.perm,
+                          np.arange(1 << w, dtype=np.int64) ^ mask):
+            flip_qs = tuple(q for m, q in enumerate(item.qubits)
+                            if (mask >> m) & 1)
+            flip_dims, fshape = _phase_broadcast_shapes(flip_qs, n)
+            flip_axes = tuple(i for i, b in enumerate(fshape) if b > 1)
+        else:
+            src = _full_perm_map(item.qubits, n, item.perm)
+
+    if const_phase is not None:
+        pr_np = np.real(const_phase).reshape(bshape).astype(np.float32)
+        pi_np = np.imag(const_phase).reshape(bshape).astype(np.float32)
+
+    def step(data, params):
+        shape = data.shape
+        flat = data.reshape(2, -1)
+        if flip_axes is not None:
+            flat = jnp.flip(flat.reshape((2,) + flip_dims),
+                            axis=[a + 1 for a in flip_axes]
+                            ).reshape(2, -1)
+        elif src is not None:
+            flat = flat[:, src]
+        if has_phase:
+            if const_phase is not None:
+                pr, pi = jnp.asarray(pr_np), jnp.asarray(pi_np)
+            else:
+                pr_w, pi_w = item.phase_planes(params)
+                pr, pi = pr_w.reshape(bshape), pi_w.reshape(bshape)
+            t = flat.reshape((2,) + dims)
+            re, im = t[0], t[1]
+            flat = jnp.stack([pr * re - pi * im, pr * im + pi * re]
+                             ).reshape(2, -1)
+        return flat.reshape(shape)
+    return step
+
+
+# -- sharded execution helpers -------------------------------------------------
+
+def _relabel_special_item(item: PlanItem, phys: tuple[int, ...]) -> PlanItem:
+    """Relabel a diag/perm item's cluster bits onto physical positions.
+
+    Inside the sharded program logical qubit ``item.qubits[m]`` lives at
+    physical position ``phys[m]`` (the trace-time permutation).  The item's
+    static phase vectors / coefficient vectors / index map are indexed by
+    cluster bits in ``item.qubits`` order, so they are re-gathered onto the
+    sorted physical positions — a pure numpy transform at trace time.
+    """
+    if phys == item.qubits:
+        return item
+    w = len(phys)
+    order = tuple(int(i) for i in np.argsort(np.asarray(phys)))
+    y = np.arange(1 << w, dtype=np.int64)
+    gmap = np.zeros_like(y)             # new cluster index -> old cluster index
+    for j, m in enumerate(order):
+        gmap |= ((y >> j) & 1) << m
+    phases = []
+    for p in item.phases:
+        if p[0] == "const":
+            phases.append(("const", p[1][gmap].astype(np.complex64)))
+        else:
+            _, op, coeff = p
+            phases.append(("param", op, coeff[gmap].astype(np.float32)))
+    perm = None
+    if item.perm is not None:
+        ginv = np.zeros_like(gmap)
+        ginv[gmap] = y
+        perm = ginv[item.perm.astype(np.int64)[gmap]].astype(np.int32)
+    return dataclasses.replace(item, qubits=tuple(sorted(phys)),
+                               phases=tuple(phases), perm=perm)
+
+
+def _local_perm_map(rho: tuple[int, ...]) -> np.ndarray:
+    """int32 gather map applying the bit-position permutation ``rho``
+    (content at position ``p`` moves to position ``rho[p]``) to a flat
+    amplitude axis: ``out[y] = in[map[y]]``."""
+    n_local = len(rho)
+    y = np.arange(1 << n_local, dtype=np.int64)
+    x = np.zeros_like(y)
+    for p in range(n_local):
+        x |= ((y >> rho[p]) & 1) << p
+    return x.astype(np.int32)
+
+
+def _apply_local_bit_perm(data: jax.Array, rho: Sequence[int]) -> jax.Array:
+    """Apply a local bit-position permutation as one static gather over the
+    flattened trailing (row, lane) axes; leading axes are preserved."""
+    rho = tuple(rho)
+    if rho == tuple(range(len(rho))):
+        return data
+    m = _local_perm_map(rho)
+    shape = data.shape
+    flat = data.reshape(shape[:-2] + (-1,))
+    return flat[..., m].reshape(shape)
+
+
+def _compact_rho(needed: Sequence[int], n_local: int) -> tuple[int, ...]:
+    """Local bit-position permutation packing ``needed`` local positions
+    into the low bits (relative order kept): scattered positions can block
+    every contiguous victim window even when enough free bits exist, and
+    one static gather un-blocks them."""
+    uniq = sorted(p for p in set(needed) if p < n_local)
+    rho = {p: j for j, p in enumerate(uniq)}
+    nxt = len(uniq)
+    for p in range(n_local):
+        if p not in rho:
+            rho[p] = nxt
+            nxt += 1
+    return tuple(rho[p] for p in range(n_local))
+
+
+def _sharded_diag_step(item: PlanItem, phys: tuple[int, ...], n_local: int):
+    """Diagonal item with cluster bits on *global* positions: applied with
+    zero communication.
+
+    A phase rotation is elementwise, and a global position's bit value is
+    constant per device (it is a bit of the device index), so each device
+    just selects its slice of the ``2**w`` phase vector: a static base map
+    over the local cluster bits plus a traced ``axis_index`` offset for the
+    global ones.  This is why a coalesced full-width diagonal run — wider
+    than any local row budget — still never pays a collective: the sharded
+    analogue of the paper's observation that diagonal fusion adds reduction
+    without adding flops (§III/§IV-D).
+    """
+    w = len(phys)
+    loc_ms = [m for m in range(w) if phys[m] < n_local]
+    glob_ms = [m for m in range(w) if phys[m] >= n_local]
+    loc_phys = tuple(phys[m] for m in loc_ms)
+    order = np.argsort(np.asarray(loc_phys)) if loc_ms else []
+    yl = np.arange(1 << len(loc_ms), dtype=np.int64)
+    base = np.zeros_like(yl)
+    for j, oj in enumerate(order):
+        base |= ((yl >> j) & 1) << loc_ms[int(oj)]
+    dims, bshape = _phase_broadcast_shapes(tuple(sorted(loc_phys)), n_local)
+
+    def step(data, params):
+        pr_full, pi_full = item.phase_planes(params)
+        idx = jax.lax.axis_index(D.STATE_AXIS)
+        off = 0
+        for m in glob_ms:
+            off = off + (((idx >> (phys[m] - n_local)) & 1) << m)
+        gidx = jnp.asarray(base) + off
+        pr = jnp.take(pr_full, gidx).reshape(bshape)
+        pi = jnp.take(pi_full, gidx).reshape(bshape)
+        shape = data.shape
+        t = data.reshape((2,) + dims)
+        re, im = t[0], t[1]
+        return jnp.stack([pr * re - pi * im, pr * im + pi * re]
+                         ).reshape(shape)
+    return step
+
+
+def _sharded_dense_step(item: PlanItem, phys: tuple[int, ...],
+                        local_ctrl: tuple[int, ...],
+                        glob_ctrl: tuple[int, ...], n_local: int):
+    """Dense item on the local block: ``apply_gate_planar`` takes the
+    physical target positions directly (gate bit ``m`` <-> ``phys[m]``, any
+    order).  Global *controls* need no data movement: the control bit is
+    constant per device, so the gate applies under a per-device predicate —
+    the distributed analogue of the paper's predicated iteration."""
+
+    def step(data, params):
+        u = item.unitary(params)
+        u_re = jnp.real(u).astype(jnp.float32)
+        u_im = jnp.imag(u).astype(jnp.float32)
+
+        def apply(d):
+            return A.apply_gate_planar(d, n_local, phys, u_re, u_im,
+                                       controls=local_ctrl)
+
+        if not glob_ctrl:
+            return apply(data)
+        idx = jax.lax.axis_index(D.STATE_AXIS)
+        pred = None
+        for p in glob_ctrl:
+            cond = ((idx >> (p - n_local)) & 1) == 1
+            pred = cond if pred is None else jnp.logical_and(pred, cond)
+        return jax.lax.cond(pred, apply, lambda d: d, data)
+    return step
+
+
+def _restore_identity(data: jax.Array, perm: list[int], n: int,
+                      n_local: int) -> tuple[jax.Array, int]:
+    """Undo the lazily tracked physical permutation at the end of the
+    sharded program, so the returned global array is an ordinary planar
+    state (logical qubit ``q`` at bit ``q``).
+
+    At most two additional ``all_to_all`` swaps and two static local
+    gathers: one swap brings every should-be-global logical qubit local (a
+    victim block avoiding the ones already local), a local gather stages
+    them contiguously in slot order, the second swap sends them up, and a
+    final gather fixes the remaining local ordering.
+    """
+    if perm == list(range(n)):
+        return data, 0
+    s = n - n_local
+    swaps = 0
+    if s:
+        inv = [0] * n
+        for q, p in enumerate(perm):
+            inv[p] = q
+        wanted = list(range(n_local, n))
+        if inv[n_local:] != wanted:
+            if any(perm[w] >= n_local for w in wanted):
+                # some wanted qubits are global (possibly in wrong slots):
+                # bring the whole global block down without displacing the
+                # locally resident wanted qubits (victim avoids them,
+                # compacting them first if they block every window)
+                local_wanted = [perm[w] for w in wanted if perm[w] < n_local]
+                try:
+                    tgt = D.pick_victim(local_wanted, s, n_local)
+                except ValueError:
+                    rho = _compact_rho(local_wanted, n_local)
+                    data = _apply_local_bit_perm(data, rho)
+                    perm = [rho[p] if p < n_local else p for p in perm]
+                    local_wanted = [rho[p] for p in local_wanted]
+                    tgt = D.pick_victim(local_wanted, s, n_local)
+                data = D.swap_block(data, D.STATE_AXIS, n_local, tgt, s)
+                perm = D.swap_perm(perm, n_local, tgt, s)
+                swaps += 1
+            # every wanted qubit is local now: stage them into
+            # [n_local - s, n_local) in slot order, everything else keeps
+            # its relative order
+            stage = n_local - s
+            rho = {}
+            for w in wanted:
+                rho[perm[w]] = stage + (w - n_local)
+            free_slots = [t for t in range(n_local) if t not in
+                          set(rho.values())]
+            rest = [p for p in range(n_local) if p not in rho]
+            for p, t in zip(rest, free_slots):
+                rho[p] = t
+            rho_t = tuple(rho[p] for p in range(n_local))
+            data = _apply_local_bit_perm(data, rho_t)
+            perm = [rho[p] if p < n_local else p for p in perm]
+            data = D.swap_block(data, D.STATE_AXIS, n_local, stage, s)
+            perm = D.swap_perm(perm, n_local, stage, s)
+            swaps += 1
+    if perm != list(range(n)):
+        # all residual misplacements are local: one gather to identity
+        rho_fix = [0] * n_local
+        for q in range(n):
+            if perm[q] < n_local:
+                rho_fix[perm[q]] = q
+        data = _apply_local_bit_perm(data, tuple(rho_fix))
+    return data, swaps
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """A fused, jitted execution program for one template structure."""
@@ -461,9 +761,11 @@ class CompiledPlan:
     interpret: bool
     items: list[PlanItem]
     specialize: bool = True
+    state_bits: int = 0              # state-sharding degree the plan targets
     compile_seconds: float = 0.0
     batch_compiles: int = 0
     batch_evictions: int = 0
+    sharded_swaps: int | None = None  # all_to_alls traced by the last sharded build
     cache_stats: "CacheStats | None" = dataclasses.field(
         default=None, repr=False)
     _single: Callable | None = dataclasses.field(default=None, repr=False)
@@ -561,58 +863,15 @@ class CompiledPlan:
             raise AssertionError(
                 "dense plans are never specialized (resolve_f forces f=0 "
                 "for the naive baseline)")
-        n = self.n
-        dims, bshape = _phase_broadcast_shapes(item.qubits, n)
-        has_phase = bool(item.phases)
-        const_phase = (item.np_phase_vector()
-                       if has_phase and not item.has_param_phase else None)
-        # permutation lowering: an XOR-mask permutation (X layers, composed
-        # bit flips) is a vectorized axis reversal — no gather at all;
-        # anything else is one static take over the flat amplitude axis
-        src = flip_dims = flip_axes = None
-        if item.perm is not None:
-            w = len(item.qubits)
-            mask = int(item.perm[0])
-            if np.array_equal(item.perm,
-                              np.arange(1 << w, dtype=np.int64) ^ mask):
-                flip_qs = tuple(q for m, q in enumerate(item.qubits)
-                                if (mask >> m) & 1)
-                flip_dims, fshape = _phase_broadcast_shapes(flip_qs, n)
-                flip_axes = tuple(i for i, b in enumerate(fshape) if b > 1)
-            else:
-                src = _full_perm_map(item.qubits, n, item.perm)
-
         if self.backend == "planar":
-            if const_phase is not None:
-                pr_np = np.real(const_phase).reshape(bshape).astype(np.float32)
-                pi_np = np.imag(const_phase).reshape(bshape).astype(np.float32)
-
-            def step(data, params):
-                shape = data.shape
-                flat = data.reshape(2, -1)
-                if flip_axes is not None:
-                    flat = jnp.flip(flat.reshape((2,) + flip_dims),
-                                    axis=[a + 1 for a in flip_axes]
-                                    ).reshape(2, -1)
-                elif src is not None:
-                    flat = flat[:, src]
-                if has_phase:
-                    if const_phase is not None:
-                        pr, pi = jnp.asarray(pr_np), jnp.asarray(pi_np)
-                    else:
-                        pr_w, pi_w = item.phase_planes(params)
-                        pr, pi = pr_w.reshape(bshape), pi_w.reshape(bshape)
-                    t = flat.reshape((2,) + dims)
-                    re, im = t[0], t[1]
-                    flat = jnp.stack([pr * re - pi * im, pr * im + pi * re]
-                                     ).reshape(2, -1)
-                return flat.reshape(shape)
-            return step
+            return _planar_special_step(item, self.n)
 
         from repro.kernels.apply_gate import ops as K
+        n = self.n
         v = self.target.lane_qubits
         interpret = self.interpret
         perm = item.perm
+        has_phase = bool(item.phases)
 
         def step(data, params):
             if has_phase:
@@ -738,41 +997,226 @@ class CompiledPlan:
                     return jax.lax.map(lambda p: program(d0, p), ps)
             return jax.jit(seq)
 
+    # -- sharded execution ----------------------------------------------------
+    def run_sharded_batch_raw(self, params_matrix, mesh) -> jax.Array:
+        """Run a ``[B, P]`` parameter matrix sharded over a two-axis mesh.
+
+        ``mesh`` must carry the engine's ``(BATCH_AXIS, STATE_AXIS)`` axes
+        (see :func:`repro.core.distributed.make_sim_mesh`) with the state
+        axis sized ``2**self.state_bits`` — the degree this plan's item
+        widths were capped for at compile time.  The batch is padded to a
+        multiple of the batch axis (padding rows repeat the last binding and
+        are sliced off before returning), every device executes its local
+        item loop with qubit-block swaps amortized across items, and the
+        returned global array is an ordinary stacked planar state (the
+        trailing permutation is restored inside the traced program).
+        """
+        pm = np.atleast_2d(np.asarray(params_matrix, np.float32))
+        if pm.ndim != 2 or pm.shape[1] != self.num_params:
+            raise ValueError(f"{self.template.name}: params matrix must be "
+                             f"[B, {self.num_params}], got {tuple(pm.shape)}")
+        if self.backend != "planar":
+            raise ValueError(
+                f"sharded execution lowers items with the planar "
+                f"applications; backend {self.backend!r} is not supported "
+                f"(use backend='planar')")
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if (D.BATCH_AXIS not in axis_sizes or D.STATE_AXIS not in axis_sizes
+                or axis_sizes[D.STATE_AXIS] != (1 << self.state_bits)):
+            raise ValueError(
+                f"mesh axes {axis_sizes} do not match this plan "
+                f"(needs {D.BATCH_AXIS!r} and {D.STATE_AXIS!r} with "
+                f"{1 << self.state_bits} state shards; recompile with the "
+                f"right state_bits for a different mesh)")
+        bs = axis_sizes[D.BATCH_AXIS]
+        b = pm.shape[0]
+        padded = -(-b // bs) * bs
+        if padded > b:
+            pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
+        key = ("sharded", padded, mesh)
+        entry = self._batched.get(key)
+        if entry is None:
+            entry = self._build_sharded(mesh, padded)
+            self._batched[key] = entry
+            self.batch_compiles += 1
+            while len(self._batched) > self.MAX_BATCHED_PROGRAMS:
+                self._batched.popitem(last=False)
+                self.batch_evictions += 1
+                if self.cache_stats is not None:
+                    self.cache_stats.batch_evictions += 1
+        else:
+            self._batched.move_to_end(key)
+        fn, counter = entry
+        raw = fn(jnp.asarray(pm))
+        self.sharded_swaps = counter["swaps"]
+        return raw[:b]
+
+    def _sharded_item_step(self, item: PlanItem, phys: tuple[int, ...],
+                           cphys: tuple[int, ...], n_local: int):
+        """Per-item closure on the local block, for the current trace-time
+        physical positions: local diag/perm items are relabeled onto
+        physical bits and reuse the planar special step; diagonal items on
+        global positions apply communication-free via a per-device phase
+        slice; dense items apply directly on the physical targets with
+        global controls predicated."""
+        if item.kind == "diag" and any(p >= n_local for p in phys):
+            return _sharded_diag_step(item, phys, n_local)
+        if item.kind in ("diag", "perm"):
+            return _planar_special_step(_relabel_special_item(item, phys),
+                                        n_local)
+        local_ctrl = tuple(p for p in cphys if p < n_local)
+        glob_ctrl = tuple(p for p in cphys if p >= n_local)
+        return _sharded_dense_step(item, phys, local_ctrl, glob_ctrl, n_local)
+
+    def _build_sharded(self, mesh, padded_b: int):
+        """Trace the sharded program: one ``shard_map`` whose body loops the
+        plan items with trace-time permutation tracking, Belady victim
+        selection, and a final permutation restore; the batch dimension is
+        vmapped *inside* each item step while collectives act on the whole
+        local batch block."""
+        n, v, s = self.n, self.target.lane_qubits, self.state_bits
+        n_local = n - s
+        bl = padded_b // int(dict(zip(mesh.axis_names,
+                                      mesh.devices.shape))[D.BATCH_AXIS])
+        items = self.items
+
+        # Belady lookahead: when evicting a local bit block for a
+        # qubit-block swap, prefer the one whose resident logical qubits
+        # are needed furthest in the future (minimizes swap thrash).
+        touch: dict[int, list[int]] = {q: [] for q in range(n)}
+        for ii, item in enumerate(items):
+            for q in item.qubits + item.controls:
+                touch[q].append(ii)
+
+        def next_use(q: int, after: int) -> int:
+            lst = touch[q]
+            j = bisect.bisect_left(lst, after)
+            return lst[j] if j < len(lst) else len(items) + n
+
+        counter = {"swaps": 0}
+
+        def local_fn(pm_local):
+            # pm_local: f32[bl, P]; local state block f32[bl, 2, R_local, V]
+            data = jnp.zeros((bl, 2, 1 << (n_local - v), 1 << v), jnp.float32)
+            if s:
+                amp0 = jnp.where(jax.lax.axis_index(D.STATE_AXIS) == 0,
+                                 1.0, 0.0)
+            else:
+                amp0 = 1.0
+            data = data.at[:, 0, 0, 0].set(amp0)
+            perm = list(range(n))
+            swaps = 0
+            for ii, item in enumerate(items):
+                phys = [perm[q] for q in item.qubits]
+                cphys = [perm[q] for q in item.controls]
+                # diagonal items never need locality (zero-communication
+                # per-device phase slice); everything else must have its
+                # target bits local before applying
+                if (s and item.kind != "diag"
+                        and any(p >= n_local for p in phys)):
+                    def pick(needed):
+                        inv = [0] * n
+                        for q, p in enumerate(perm):
+                            inv[p] = q
+
+                        def score(blk):
+                            return min(next_use(inv[p], ii)
+                                       for p in range(blk, blk + s))
+                        return D.pick_victim(needed, s, n_local, score=score)
+
+                    # prefer a victim avoiding local controls too; when
+                    # control-heavy items leave no room, displaced controls
+                    # simply turn global and get predicated
+                    needed = phys + [p for p in cphys if p < n_local]
+                    if len([p for p in needed if p < n_local]) > n_local - s:
+                        needed = list(phys)
+                    try:
+                        tgt = pick(needed)
+                    except ValueError:
+                        # scattered positions blocked every window: pack
+                        # them into the low bits with one static gather
+                        rho = _compact_rho(needed, n_local)
+                        data = _apply_local_bit_perm(data, rho)
+                        perm = [rho[p] if p < n_local else p for p in perm]
+                        needed = [rho[p] if p < n_local else p
+                                  for p in needed]
+                        tgt = pick(needed)
+                    data = D.swap_block(data, D.STATE_AXIS, n_local, tgt, s)
+                    perm = D.swap_perm(perm, n_local, tgt, s)
+                    swaps += 1
+                    phys = [perm[q] for q in item.qubits]
+                    cphys = [perm[q] for q in item.controls]
+                step = self._sharded_item_step(item, tuple(phys),
+                                               tuple(cphys), n_local)
+                data = jax.vmap(step)(data, pm_local)
+            data, restore_swaps = _restore_identity(data, perm, n, n_local)
+            counter["swaps"] = swaps + restore_swaps
+            return data
+
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.sharding import shard_map
+        fn = shard_map(local_fn, mesh=mesh,
+                       in_specs=(P(D.BATCH_AXIS, None),),
+                       out_specs=P(D.BATCH_AXIS, None, D.STATE_AXIS, None))
+        return jax.jit(fn), counter
+
+
+def _plan_width_budget(target: Target, n: int, state_bits: int) -> int:
+    """Fused-cluster width budget of a (possibly sharded) plan.
+
+    The canonical rule is :func:`repro.core.target.row_budget`, applied to
+    the qubit count a program block actually sees: the full ``n`` for a
+    single-device plan, the local ``n - state_bits`` sub-state for a sharded
+    one.  Sharded plans are additionally capped at ``n_local - state_bits``
+    so a ``state_bits``-wide victim block always exists for the qubit-block
+    swap that precedes an item on global positions.
+    """
+    n_local = n - state_bits
+    budget = row_budget(n_local, target)
+    if state_bits:
+        budget = max(2, min(budget, n_local - state_bits))
+    return budget
+
 
 def resolve_f(f: int | None, target: Target, n: int, fuse: bool,
-              backend: str) -> int:
+              backend: str, state_bits: int = 0) -> int:
     """Effective fusion degree: 0 when fusion is off (dense baseline), else
     auto-chosen from the target's machine balance and capped by the state's
     qubit budget.
 
     Lane-tiled backends (planar/pallas) only have ``n - lane_qubits`` row
     qubits, so a fused cluster wider than that row budget would force lane
-    reshuffles the block layout cannot express — mirror the
-    ``min(f, n_local - v)`` cap used by ``core.distributed``.
+    reshuffles the block layout cannot express; the cap is
+    :func:`repro.core.target.row_budget` via :func:`_plan_width_budget`
+    (which shrinks the effective ``n`` for sharded plans) — the same rule
+    ``DistributedSimulator.prepare`` applies to its local sub-state.
     """
     if not fuse or backend == "dense":
         return 0
     f_res = f if f is not None else choose_f(target)
-    row_budget = max(2, n - target.lane_qubits)
-    return max(2, min(f_res, n, row_budget))
+    return max(2, min(f_res, n, _plan_width_budget(target, n, state_bits)))
 
 
-def resolve_diag_f(f_eff: int, target: Target, n: int) -> int:
+def resolve_diag_f(f_eff: int, target: Target, n: int,
+                   state_bits: int = 0) -> int:
     """Width cap for diagonal/monomial clusters: the full row budget
-    ``n - lane_qubits`` (never below the general degree ``f_eff``).
+    (never below the general degree ``f_eff``).
 
     A diagonal cluster composes into a ``2**w`` phase *vector*, not a
     ``4**w`` matrix, so widening it raises fusion reduction at O(2**w)
     memory and zero extra flops per amplitude — the only binding limit is
-    the lane-tiled backends' row budget (mirroring :func:`resolve_f`).
+    the lane-tiled backends' row budget
+    (:func:`repro.core.target.row_budget` via :func:`_plan_width_budget`,
+    mirroring :func:`resolve_f`).
     """
-    return max(f_eff, 2, n - target.lane_qubits)
+    return max(f_eff, 2, _plan_width_budget(target, n, state_bits))
 
 
 def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None = None, fuse: bool = True,
-                 interpret: bool = True,
-                 specialize: bool = True) -> CompiledPlan:
+                 interpret: bool = True, specialize: bool = True,
+                 state_bits: int = 0) -> CompiledPlan:
     """Cluster once, lower once: build the fused program for one structure.
 
     ``specialize`` enables gate-class-aware lowering: diagonal and
@@ -780,15 +1224,21 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
     / index-map fast paths, and diagonal runs may fuse up to
     :func:`resolve_diag_f` qubits wide.  The dense no-fusion baseline
     (``f_eff == 0``) is never specialized — it stays the naive oracle.
+
+    ``state_bits`` compiles the plan for state-sharded execution over
+    ``2**state_bits`` devices (:meth:`CompiledPlan.run_sharded_batch_raw`):
+    item widths are capped by the *local* sub-state's row budget, which is
+    why plans for different mesh shapes are distinct cache entries.
     """
     t0 = time.perf_counter()
     dummy = template.bind(np.zeros(template.num_params))
     ops = template.ops
-    f_eff = resolve_f(f, target, template.n, fuse, backend)
+    f_eff = resolve_f(f, target, template.n, fuse, backend,
+                      state_bits=state_bits)
     specialize = bool(specialize and f_eff)
     if f_eff:
-        diag_f = resolve_diag_f(f_eff, target, template.n) if specialize \
-            else None
+        diag_f = resolve_diag_f(f_eff, target, template.n,
+                                state_bits=state_bits) if specialize else None
         classes = ([PARAM_OP_CLASS.get(op.kind) for op in ops]
                    if specialize else None)
         prep, specs = cluster_gates(dummy.gates, f_eff, diag_f=diag_f,
@@ -798,12 +1248,15 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                  if (it := _lower_cluster(s, prep, ops,
                                           diag_cap=diag_cap)) is not None]
         if specialize and backend != "pallas":
-            items = _coalesce_diag_runs(items)
+            # sharded plans cap the merged span: per-device phase-vector
+            # constants must not outgrow the local state block
+            items = _coalesce_diag_runs(
+                items, max_width=diag_f if state_bits else None)
     else:
         items = [_lower_single(op, g) for op, g in zip(ops, dummy.gates)]
     plan = CompiledPlan(template=template, backend=backend, target=target,
                         f=f_eff, interpret=interpret, items=items,
-                        specialize=specialize)
+                        specialize=specialize, state_bits=state_bits)
     plan.compile_seconds = time.perf_counter() - t0
     return plan
 
@@ -831,22 +1284,36 @@ class PlanCache:
     @staticmethod
     def plan_key(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None, fuse: bool, interpret: bool,
-                 specialize: bool = True) -> tuple:
-        f_eff = resolve_f(f, target, template.n, fuse, backend)
+                 specialize: bool = True, state_bits: int = 0) -> tuple:
+        """Cache key: structure hash + everything that changes the lowering.
+
+        ``state_bits`` makes the key mesh-shape-aware: a sharded plan's item
+        widths are capped by the per-device sub-state (see
+        :func:`compile_plan`), so the same template state-sharded a
+        different number of ways is a different compiled artifact — and
+        must never be served from a single-device cache hit.  The *batch*
+        extent of a mesh is deliberately absent: batch-only sharding reuses
+        the single-device lowering (per-mesh executables are keyed inside
+        :attr:`CompiledPlan._batched`), so keying it would only fragment
+        the cache with identical compiles.
+        """
+        f_eff = resolve_f(f, target, template.n, fuse, backend,
+                          state_bits=state_bits)
         return (template.structure_key(), backend, target.name, f_eff,
                 interpret and backend == "pallas",
-                bool(specialize and f_eff))
+                bool(specialize and f_eff), state_bits)
 
     def get_or_compile(self, template: CircuitTemplate | Circuit, *,
                        backend: str, target: Target, f: int | None = None,
                        fuse: bool = True, interpret: bool = True,
-                       specialize: bool = True) -> CompiledPlan:
+                       specialize: bool = True,
+                       state_bits: int = 0) -> CompiledPlan:
         if isinstance(template, Circuit):
             from repro.engine.template import template_of
             template = template_of(template)
         key = self.plan_key(template, backend=backend, target=target, f=f,
                             fuse=fuse, interpret=interpret,
-                            specialize=specialize)
+                            specialize=specialize, state_bits=state_bits)
         plan = self._plans.get(key)
         if plan is not None:
             self.stats.hits += 1
@@ -855,7 +1322,7 @@ class PlanCache:
         self.stats.misses += 1
         plan = compile_plan(template, backend=backend, target=target, f=f,
                             fuse=fuse, interpret=interpret,
-                            specialize=specialize)
+                            specialize=specialize, state_bits=state_bits)
         plan.cache_stats = self.stats
         self.stats.compiles += 1
         self._plans[key] = plan

@@ -43,7 +43,16 @@ from repro.engine.template import CircuitTemplate, template_of
 
 
 class RequestState:
-    """Lifecycle states of a scheduled request."""
+    """Lifecycle states of a scheduled request.
+
+    Transitions are strictly forward — ``QUEUED -> DISPATCHED -> DONE |
+    FAILED`` — and every submitted request reaches a terminal state: a
+    batch that raises at plan compile / dispatch time fails straight from
+    ``QUEUED``, a device-side failure fails from ``DISPATCHED``, and no
+    path re-queues or drops a request.  ``Request.done`` / ``Request.ok``
+    are the terminal-state predicates; ``Request.wait()`` blocks on a
+    ``DISPATCHED`` request's in-flight batch.
+    """
 
     QUEUED = "QUEUED"          # submitted, waiting in the scheduler queue
     DISPATCHED = "DISPATCHED"  # launched on device, result not yet retired
@@ -242,12 +251,10 @@ class BatchScheduler:
 
     # -- grouping -------------------------------------------------------------
     def _plan_key(self, req: Request) -> tuple:
+        """Grouping key = the executor's plan-cache key (mesh-shape-aware:
+        the same structure headed for a different mesh never co-batches)."""
         if req._key is None:
-            ex = self.executor
-            req._key = ex.cache.plan_key(
-                req.template, backend=ex.backend, target=ex.target, f=ex.f,
-                fuse=ex.fuse, interpret=ex.interpret,
-                specialize=ex.specialize)
+            req._key = self.executor.plan_key(req.template)
         return req._key
 
     def _take_groups(self) -> list[list[Request]]:

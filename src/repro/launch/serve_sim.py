@@ -104,6 +104,13 @@ def main(argv=None):
                          "oldest request has waited this long (default: "
                          "only drain dispatches)")
     ap.add_argument("--f", type=int, default=None)
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="execute sharded over this many devices (batch-"
+                         "first split; planar backend only; see --max-local-"
+                         "qubits for the state-sharding spill)")
+    ap.add_argument("--max-local-qubits", type=int, default=None,
+                    help="per-device row budget: requests whose n exceeds "
+                         "it spill from batch sharding into state sharding")
     ap.add_argument("--specialize", default="on", choices=["on", "off"],
                     help="gate-class-specialized plan lowering (diagonal/"
                          "permutation fast paths)")
@@ -119,7 +126,9 @@ def main(argv=None):
 
     executor = BatchExecutor(target=get_target(args.target),
                              backend=args.backend, f=args.f,
-                             specialize=args.specialize == "on")
+                             specialize=args.specialize == "on",
+                             mesh=args.mesh,
+                             max_local_qubits=args.max_local_qubits)
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
                            max_wait_ms=args.max_wait_ms)
@@ -135,6 +144,8 @@ def main(argv=None):
             BatchExecutor(target=get_target(args.target),
                           backend=args.backend, f=args.f,
                           specialize=args.specialize == "on",
+                          mesh=args.mesh,
+                          max_local_qubits=args.max_local_qubits,
                           cache=executor.cache),   # warm plans: isolate overlap
             max_batch=args.max_batch)
         before = executor.cache.stats.as_dict()   # shared cache: report deltas

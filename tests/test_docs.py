@@ -1,0 +1,42 @@
+"""Docs suite guarantees: intra-repo links resolve, the required documents
+exist and are linked from the README, and the usage snippets in
+docs/ARCHITECTURE.md execute (doctest) — the same checks the CI docs job
+runs, enforced in tier-1 so they can't rot between CI configs."""
+import doctest
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    for doc in ("docs/ARCHITECTURE.md", "docs/BENCHMARKS.md"):
+        assert os.path.exists(os.path.join(ROOT, doc)), doc
+    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as fh:
+        readme = fh.read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/BENCHMARKS.md" in readme
+
+
+def test_no_broken_intra_repo_links():
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    try:
+        import check_links
+    finally:
+        sys.path.pop(0)
+    errors = []
+    files = [os.path.join(ROOT, "README.md"),
+             os.path.join(ROOT, "docs", "ARCHITECTURE.md"),
+             os.path.join(ROOT, "docs", "BENCHMARKS.md")]
+    for f in files:
+        errors += check_links.check_file(f)
+    assert not errors, "\n".join(errors)
+
+
+def test_architecture_doctests_execute():
+    """The usage snippets in ARCHITECTURE.md are real doctests; run them."""
+    results = doctest.testfile(
+        os.path.join(ROOT, "docs", "ARCHITECTURE.md"),
+        module_relative=False, optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert results.attempted > 10, "ARCHITECTURE.md lost its usage snippets"
+    assert results.failed == 0, f"{results.failed} doctest failures"

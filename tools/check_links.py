@@ -1,0 +1,82 @@
+"""Intra-repo markdown link checker (docs CI job).
+
+Scans README.md and docs/*.md for markdown links, and fails when a relative
+link points at a file that does not exist or at a heading anchor that no
+heading in the target file produces (GitHub-style slugs).  External links
+(http/https/mailto) are ignored — CI must not depend on the network.
+
+  python tools/check_links.py            # default file set
+  python tools/check_links.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    s = heading.strip().lower().replace("`", "")
+    s = "".join(c for c in s if c.isalnum() or c in " _-")
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = os.path.relpath(path, REPO_ROOT)
+        if target.startswith("#"):
+            if target[1:] not in anchors_of(path):
+                errors.append(f"{rel}: broken anchor {target!r}")
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, file_part))
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: broken link {target!r} "
+                          f"(no such file {os.path.relpath(dest, REPO_ROOT)})")
+            continue
+        if anchor and dest.endswith(".md") and anchor not in anchors_of(dest):
+            errors.append(f"{rel}: broken anchor {target!r} "
+                          f"(no heading slugs to {anchor!r} in "
+                          f"{os.path.relpath(dest, REPO_ROOT)})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README.md docs/*.md)")
+    args = ap.parse_args(argv)
+    files = args.files or (
+        [os.path.join(REPO_ROOT, "README.md")]
+        + sorted(glob.glob(os.path.join(REPO_ROOT, "docs", "*.md"))))
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} broken links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
