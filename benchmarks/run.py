@@ -11,8 +11,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (batch_throughput, fig6_overall, fig10_fusion,
-                        fig11_ai, fig12_ablation, fig13_scaling,
+from benchmarks import (batch_throughput, concurrent_ingest, fig6_overall,
+                        fig10_fusion, fig11_ai, fig12_ablation, fig13_scaling,
                         fig14_projection, gate_classes, roofline,
                         serve_mixed, sharded_batch, tab3_gate_ops,
                         tab4_vectorization)
@@ -29,6 +29,7 @@ MODULES = {
     "roofline": roofline,
     "batch": batch_throughput,
     "serve": serve_mixed,
+    "ingest": concurrent_ingest,
     "classes": gate_classes,
     "sharded": sharded_batch,
 }

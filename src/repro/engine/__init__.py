@@ -17,3 +17,6 @@ from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
     BatchScheduler, InFlightBatch, Request, RequestState, SchedulerStats,
 )
+from repro.engine.ingest import (  # noqa: F401
+    IngestClosed, IngestHandle, IngestRejected, IngestServer,
+)

@@ -19,6 +19,7 @@ sub-state shrinks their fused-cluster width caps.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Sequence
 
 import jax
@@ -50,6 +51,13 @@ class BatchExecutor:
     def __post_init__(self):
         if self.cache is None:
             self.cache = PlanCache()
+        # ingest lock discipline: the executor is shared by every producer
+        # thread and the drain loop.  Plan resolution is serialized inside
+        # PlanCache (one compile per structure, exact counters), per-plan
+        # executable caches inside CompiledPlan; this lock covers the one
+        # remaining shared mutable — the mesh dict.  dispatch_batch itself
+        # stays lock-free so launches overlap device execution.
+        self._mesh_lock = threading.Lock()
         self._meshes: dict = {}
         self._device_pool: list | None = None
         if self.mesh is None:
@@ -76,11 +84,12 @@ class BatchExecutor:
                                    max_local_qubits=self.max_local_qubits)
 
     def _mesh_for(self, spec: D.ShardSpec):
-        mesh = self._meshes.get(spec)
-        if mesh is None:
-            mesh = D.make_sim_mesh(spec, self._device_pool)
-            self._meshes[spec] = mesh
-        return mesh
+        with self._mesh_lock:
+            mesh = self._meshes.get(spec)
+            if mesh is None:
+                mesh = D.make_sim_mesh(spec, self._device_pool)
+                self._meshes[spec] = mesh
+            return mesh
 
     # -- plan resolution ------------------------------------------------------
     def plan_for(self, template: CircuitTemplate | Circuit) -> CompiledPlan:

@@ -33,6 +33,7 @@ import bisect
 import collections
 import dataclasses
 import functools
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -771,6 +772,10 @@ class CompiledPlan:
     _single: Callable | None = dataclasses.field(default=None, repr=False)
     _batched: collections.OrderedDict = dataclasses.field(
         default_factory=collections.OrderedDict, repr=False)
+    # guards the per-plan executable caches (_single/_batched) and their
+    # counters under concurrent dispatchers; execution runs outside it
+    _plock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def n(self) -> int:
@@ -927,11 +932,13 @@ class CompiledPlan:
     # -- execution ------------------------------------------------------------
     def run(self, params=None, initial: SV.State | None = None) -> SV.State:
         """Execute for one parameter vector; one dispatch of the fused jit."""
-        if self._single is None:
-            # donate the state buffer on the planar paths (matches the old
-            # per-gate jits); dense allocates a fresh complex input anyway
-            donate = () if self.backend == "dense" else (0,)
-            self._single = jax.jit(self._program(), donate_argnums=donate)
+        with self._plock:
+            if self._single is None:
+                # donate the state buffer on the planar paths (matches the
+                # old per-gate jits); dense allocates a fresh complex input
+                # anyway
+                donate = () if self.backend == "dense" else (0,)
+                self._single = jax.jit(self._program(), donate_argnums=donate)
         data0 = self._initial_data(initial)
         if initial is not None and self.backend != "dense":
             data0 = jnp.array(data0)   # don't donate the caller's buffer
@@ -950,9 +957,18 @@ class CompiledPlan:
         data0 = (initial_batch if batched_init
                  else self._initial_data(initial))
         key = (int(pm.shape[0]), batched_init)
+        with self._plock:
+            fn = self._get_or_build(key, lambda: self._build_batched(
+                data0, pm, batched_init))
+        return fn(data0, pm)
+
+    def _get_or_build(self, key, build: Callable):
+        """LRU lookup/insert in the per-plan executable dict.  Caller holds
+        ``_plock``: concurrent dispatchers of the same plan must neither
+        double-build a key nor lose an eviction count."""
         fn = self._batched.get(key)
         if fn is None:
-            fn = self._build_batched(data0, pm, batched_init)
+            fn = build()
             self._batched[key] = fn
             self.batch_compiles += 1
             # bound the per-plan dict of batched executables: distinct batch
@@ -961,10 +977,10 @@ class CompiledPlan:
                 self._batched.popitem(last=False)
                 self.batch_evictions += 1
                 if self.cache_stats is not None:
-                    self.cache_stats.batch_evictions += 1
+                    self.cache_stats.bump("batch_evictions")
         else:
             self._batched.move_to_end(key)
-        return fn(data0, pm)
+        return fn
 
     def run_batch(self, params_matrix, initial: SV.State | None = None,
                   ) -> list[SV.State]:
@@ -1034,18 +1050,9 @@ class CompiledPlan:
         if padded > b:
             pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
         key = ("sharded", padded, mesh)
-        entry = self._batched.get(key)
-        if entry is None:
-            entry = self._build_sharded(mesh, padded)
-            self._batched[key] = entry
-            self.batch_compiles += 1
-            while len(self._batched) > self.MAX_BATCHED_PROGRAMS:
-                self._batched.popitem(last=False)
-                self.batch_evictions += 1
-                if self.cache_stats is not None:
-                    self.cache_stats.batch_evictions += 1
-        else:
-            self._batched.move_to_end(key)
+        with self._plock:
+            entry = self._get_or_build(
+                key, lambda: self._build_sharded(mesh, padded))
         fn, counter = entry
         raw = fn(jnp.asarray(pm))
         self.sharded_swaps = counter["swaps"]
@@ -1263,22 +1270,48 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
 
 @dataclasses.dataclass
 class CacheStats:
+    """Plan-cache counters, safe under concurrent executors.
+
+    Mutations go through :meth:`bump` (internal lock, created outside the
+    dataclass fields), so hit/miss/eviction accounting stays exact when
+    many producer threads resolve plans at once; ``as_dict`` snapshots
+    under the same lock.
+    """
+
     hits: int = 0
     misses: int = 0
     compiles: int = 0
     evictions: int = 0
     batch_evictions: int = 0     # per-plan batched-executable LRU evictions
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def bump(self, name: str, k: int = 1) -> None:
+        with self._lock:
+            setattr(self, name, getattr(self, name) + k)
+
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
 
 
 class PlanCache:
-    """LRU cache of compiled plans keyed by structure hash + exec config."""
+    """LRU cache of compiled plans keyed by structure hash + exec config.
+
+    Thread-safe: lookups, inserts, and evictions hold one reentrant lock,
+    so concurrent submitters resolving the same structure get exactly one
+    compile (the loser of the race hits) and the LRU order plus the
+    hit/miss/eviction counters stay consistent.  Compiles run *inside* the
+    lock deliberately — racing compiles of one structure would waste far
+    more than the serialization costs.
+    """
 
     def __init__(self, max_plans: int = 256):
         self.max_plans = max_plans
         self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.RLock()
         self.stats = CacheStats()
 
     @staticmethod
@@ -1314,27 +1347,30 @@ class PlanCache:
         key = self.plan_key(template, backend=backend, target=target, f=f,
                             fuse=fuse, interpret=interpret,
                             specialize=specialize, state_bits=state_bits)
-        plan = self._plans.get(key)
-        if plan is not None:
-            self.stats.hits += 1
-            self._plans.move_to_end(key)
-            return plan
-        self.stats.misses += 1
-        plan = compile_plan(template, backend=backend, target=target, f=f,
-                            fuse=fuse, interpret=interpret,
-                            specialize=specialize, state_bits=state_bits)
-        plan.cache_stats = self.stats
-        self.stats.compiles += 1
-        self._plans[key] = plan
-        while len(self._plans) > self.max_plans:
-            self._plans.popitem(last=False)
-            self.stats.evictions += 1
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.stats.bump("hits")
+                self._plans.move_to_end(key)
+                return plan
+            self.stats.bump("misses")
+            plan = compile_plan(template, backend=backend, target=target,
+                                f=f, fuse=fuse, interpret=interpret,
+                                specialize=specialize, state_bits=state_bits)
+            plan.cache_stats = self.stats
+            self.stats.bump("compiles")
+            self._plans[key] = plan
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+                self.stats.bump("evictions")
         return plan
 
     def class_counts(self) -> dict:
         """Aggregate fused-gate counts by lowering class over cached plans."""
         counts = {"diagonal": 0, "permutation": 0, "general": 0}
-        for plan in self._plans.values():
+        with self._lock:
+            plans = list(self._plans.values())
+        for plan in plans:
             for cls, c in plan.class_counts().items():
                 counts[cls] += c
         return counts
@@ -1343,7 +1379,9 @@ class PlanCache:
         """Aggregate per-amplitude flops (actual vs generic lowering) over
         cached plans — the estimated specialization win."""
         generic = actual = 0.0
-        for plan in self._plans.values():
+        with self._lock:
+            plans = list(self._plans.values())
+        for plan in plans:
             d = plan.flops_per_amp()
             generic += d["flops_per_amp_generic"]
             actual += d["flops_per_amp_actual"]
@@ -1352,11 +1390,13 @@ class PlanCache:
                 "flops_saved_frac": 1.0 - actual / generic if generic else 0.0}
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     def clear(self) -> None:
-        self._plans.clear()
-        self.stats = CacheStats()
+        with self._lock:
+            self._plans.clear()
+            self.stats = CacheStats()
 
 
 # module-level default, shared across Simulator instances the way the old

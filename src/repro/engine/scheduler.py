@@ -24,14 +24,27 @@ or device execution) marks exactly its own requests ``FAILED`` with the
 exception recorded on ``Request.error``, and every other batch still runs.
 Latencies are recorded only after device results are ready — an idle
 scheduler reports no latency at all rather than a fake 0.0 ms.
+
+The scheduler is safe under concurrent producers: the queue, the in-flight
+window, and every counter are guarded (``SchedulerStats`` carries its own
+lock; batches retire idempotently under a per-batch lock), and drain loops
+never busy-spin: :meth:`BatchScheduler.poll` is the non-blocking step
+(launch full/aged groups, retire only batches whose device results are
+already available), while :meth:`BatchScheduler.wait_for_work` /
+``drain_async(wait_ms=)`` give scheduler-level loops a condition wait on
+submissions.  (The ingest front end pairs ``poll`` with its *own* intake
+condition, which also covers its producer lanes.)  Time is
+injectable (``clock=``) so concurrency tests can step aging triggers and
+latencies deterministically (:class:`repro.testing.FakeClock`).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import itertools
+import threading
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import numpy as np
@@ -60,6 +73,10 @@ class RequestState:
     FAILED = "FAILED"          # execution raised; Request.error holds why
 
 
+_STATE_ORDER = {RequestState.QUEUED: 0, RequestState.DISPATCHED: 1,
+                RequestState.DONE: 2, RequestState.FAILED: 2}
+
+
 @dataclasses.dataclass
 class Request:
     """One circuit execution moving through the scheduler lifecycle."""
@@ -72,10 +89,29 @@ class Request:
     result: SV.State | None = None
     latency: float | None = None     # seconds, submit -> result ready
     error: Exception | None = None
+    history: list = dataclasses.field(default_factory=list)
     _batch: "InFlightBatch | None" = dataclasses.field(
         default=None, repr=False, compare=False)
     _key: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if not self.history:
+            self.history.append(self.state)
+
+    def _transition(self, new: str) -> None:
+        """Forward-only state change; raises on any backward/duplicate move.
+
+        Enforced (not just documented) so a concurrency bug that double-
+        retires or re-queues a request fails loudly in the stress suite
+        instead of silently corrupting the lifecycle history.
+        """
+        if _STATE_ORDER[new] <= _STATE_ORDER[self.state]:
+            raise RuntimeError(
+                f"request {self.req_id}: illegal lifecycle transition "
+                f"{self.state} -> {new} (history: {self.history})")
+        self.state = new
+        self.history.append(new)
 
     @property
     def done(self) -> bool:
@@ -98,6 +134,36 @@ class Request:
         return self
 
 
+def validate_params(template: CircuitTemplate | Circuit,
+                    params) -> tuple[CircuitTemplate, np.ndarray]:
+    """Canonical submission validation: Circuit -> template conversion and
+    parameter-vector coercion/shape check.  Shared by the scheduler and the
+    ingest front end so the two entry points can never drift."""
+    if isinstance(template, Circuit):
+        template = template_of(template)
+    p = (np.zeros(template.num_params, np.float32) if params is None
+         else np.asarray(params, np.float32).reshape(-1))
+    if p.shape[0] != template.num_params:
+        raise ValueError(f"{template.name}: expected "
+                         f"{template.num_params} params, got {p.shape[0]}")
+    return template, p
+
+
+def validate_sweep(template: CircuitTemplate, params_matrix) -> np.ndarray:
+    """Canonical ``[B, P]`` sweep-matrix coercion: a 1-D array is B separate
+    bindings when the template takes one parameter, a single P-parameter
+    binding otherwise."""
+    arr = np.asarray(params_matrix, np.float32)
+    if arr.ndim == 1:
+        arr = (arr.reshape(-1, 1) if template.num_params == 1
+               else arr.reshape(1, -1))
+    if arr.ndim != 2 or arr.shape[1] != template.num_params:
+        raise ValueError(
+            f"{template.name}: params matrix must be "
+            f"[B, {template.num_params}], got {tuple(arr.shape)}")
+    return arr
+
+
 def _pad_size(b: int, max_batch: int) -> int:
     """Next power of two >= b, capped at max_batch."""
     p = 1
@@ -108,23 +174,53 @@ def _pad_size(b: int, max_batch: int) -> int:
 
 @dataclasses.dataclass
 class SchedulerStats:
+    """Aggregate serving counters, safe under concurrent submitters.
+
+    Every mutation goes through a method that holds the internal lock, so
+    8 producer threads hammering ``submit`` while a drain loop retires
+    batches never lose an increment; ``summary()`` snapshots under the same
+    lock.  (The lock lives outside the dataclass fields so equality/repr
+    semantics are unchanged.)
+    """
+
     requests: int = 0
     batches: int = 0
     padded_slots: int = 0
     failed: int = 0
     latencies: list = dataclasses.field(default_factory=list)
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add_request(self) -> None:
+        with self._lock:
+            self.requests += 1
+
+    def add_batch(self, padded_slots: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.padded_slots += padded_slots
+
+    def add_failure(self) -> None:
+        with self._lock:
+            self.failed += 1
+
+    def add_latency(self, seconds: float) -> None:
+        with self._lock:
+            self.latencies.append(seconds)
+
     def summary(self) -> dict:
-        out = {
-            "requests": self.requests,
-            "batches": self.batches,
-            "padded_slots": self.padded_slots,
-            "failed": self.failed,
-        }
+        with self._lock:
+            lat = np.asarray(self.latencies) if self.latencies else None
+            out = {
+                "requests": self.requests,
+                "batches": self.batches,
+                "padded_slots": self.padded_slots,
+                "failed": self.failed,
+            }
         # no latency keys at all for an idle scheduler — a fabricated 0.0 ms
         # percentile is indistinguishable from a genuinely fast one
-        if self.latencies:
-            lat = np.asarray(self.latencies)
+        if lat is not None:
             out.update({
                 "latency_mean_ms": float(lat.mean() * 1e3),
                 "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
@@ -137,47 +233,61 @@ class InFlightBatch:
     """One launched batch whose device results have not been retired yet."""
 
     def __init__(self, plan, requests: list[Request], raw,
-                 stats: SchedulerStats):
+                 stats: SchedulerStats,
+                 clock: Callable[[], float] = time.perf_counter):
         self.plan = plan
         self.requests = requests
         self.raw = raw                   # unwaited device array [padded, ...]
         self.stats = stats
+        self.clock = clock
         self.finalized = False
+        self._flock = threading.Lock()   # finalize is idempotent *and* racy-
+                                         # safe: wait() callers vs drain loop
+
+    @property
+    def ready(self) -> bool:
+        """True when device results can be retired without blocking."""
+        if self.finalized:
+            return True
+        try:
+            return bool(self.raw.is_ready())
+        except AttributeError:  # non-jax raw (test doubles): treat as ready
+            return True
 
     def finalize(self) -> None:
         """Wait for device results and retire every request (idempotent)."""
-        if self.finalized:
-            return
-        self.finalized = True
-        try:
-            jax.block_until_ready(self.raw)
-        except Exception as e:  # noqa: BLE001 — device-side failure
+        with self._flock:
+            if self.finalized:
+                return
+            self.finalized = True
+            try:
+                jax.block_until_ready(self.raw)
+            except Exception as e:  # noqa: BLE001 — device-side failure
+                self.raw = None
+                _fail(self.requests, e, self.stats, self.clock())
+                return
+            now = self.clock()
+            states = self.plan.wrap_batch(self.raw, count=len(self.requests))
+            for req, state in zip(self.requests, states):
+                req.result = state
+                req.latency = now - req.submitted
+                req._transition(RequestState.DONE)
+                self.stats.add_latency(req.latency)
             self.raw = None
-            _fail(self.requests, e, self.stats)
-            return
-        now = time.perf_counter()
-        states = self.plan.wrap_batch(self.raw, count=len(self.requests))
-        for req, state in zip(self.requests, states):
-            req.result = state
-            req.latency = now - req.submitted
-            req.state = RequestState.DONE
-            self.stats.latencies.append(req.latency)
-        self.raw = None
 
 
 def _fail(requests: list[Request], error: Exception,
-          stats: SchedulerStats) -> None:
+          stats: SchedulerStats, now: float) -> None:
     """Terminal FAILED transition: record error + latency, never re-raise.
 
     Failure latencies stay on the Request only — mixing time-to-failure into
     the aggregate percentiles would skew p50/p99 of the served traffic.
     """
-    now = time.perf_counter()
     for req in requests:
-        req.state = RequestState.FAILED
         req.error = error
         req.latency = now - req.submitted
-        stats.failed += 1
+        req._transition(RequestState.FAILED)
+        stats.add_failure()
 
 
 class BatchScheduler:
@@ -188,12 +298,20 @@ class BatchScheduler:
     streaming dispatch from ``submit`` itself: a plan group launches as soon
     as it reaches ``max_batch`` requests, or once its oldest request has
     waited longer than ``max_wait_ms``; with the default ``None`` nothing
-    launches until ``drain`` / ``drain_async``.
+    launches until ``drain`` / ``drain_async`` / ``poll``.
+
+    Safe under concurrent producers: the grouped queue and window are
+    lock-guarded, and submissions notify a condition variable so drain
+    loops (:class:`repro.engine.ingest.IngestServer`) block on
+    :meth:`wait_for_work` instead of busy-spinning.  ``clock`` injects the
+    time source used for submit stamps, aging triggers, and latencies
+    (default ``time.perf_counter``; tests pass a fake).
     """
 
     def __init__(self, executor: BatchExecutor | None = None,
                  max_batch: int = 64, pad_to_pow2: bool = True,
-                 inflight: int = 2, max_wait_ms: float | None = None):
+                 inflight: int = 2, max_wait_ms: float | None = None,
+                 clock: Callable[[], float] | None = None):
         if inflight < 0:
             raise ValueError(f"inflight must be >= 0, got {inflight}")
         self.executor = executor if executor is not None else BatchExecutor()
@@ -202,34 +320,40 @@ class BatchScheduler:
         self.inflight = inflight
         self.max_wait_ms = max_wait_ms
         self.stats = SchedulerStats()
+        self._clock = clock if clock is not None else time.perf_counter
         self._ids = itertools.count()
+        # one lock guards the queue + window; the condition variable is
+        # signalled on every submit so drain loops can sleep between bursts
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
         self._window: collections.deque[InFlightBatch] = collections.deque()
         # the queue, grouped by plan key, maintained incrementally so the
         # streaming trigger check in submit() stays O(group count)
         self._groups: dict[tuple, list[Request]] = {}
 
     @property
+    def clock(self) -> Callable[[], float]:
+        return self._clock
+
+    @property
     def pending(self) -> list[Request]:
         """Queued (not yet dispatched) requests, in submit order per group."""
-        return [r for reqs in self._groups.values() for r in reqs]
+        with self._lock:
+            return [r for reqs in self._groups.values() for r in reqs]
 
     # -- queueing -------------------------------------------------------------
     def submit(self, template: CircuitTemplate | Circuit,
                params: Sequence[float] | None = None) -> Request:
         """Enqueue one request; returns a future-like handle immediately."""
-        if isinstance(template, Circuit):
-            template = template_of(template)
-        p = (np.zeros(template.num_params, np.float32) if params is None
-             else np.asarray(params, np.float32).reshape(-1))
-        if p.shape[0] != template.num_params:
-            raise ValueError(f"{template.name}: expected "
-                             f"{template.num_params} params, got {p.shape[0]}")
-        req = Request(req_id=next(self._ids), template=template, params=p,
-                      submitted=time.perf_counter())
-        self._groups.setdefault(self._plan_key(req), []).append(req)
-        self.stats.requests += 1
+        template, p = validate_params(template, params)
+        with self._lock:
+            req = Request(req_id=next(self._ids), template=template, params=p,
+                          submitted=self._clock())
+            self._groups.setdefault(self._plan_key(req), []).append(req)
+            self._work.notify_all()
+        self.stats.add_request()
         if self.max_wait_ms is not None:
-            self._poll_triggers()
+            self._dispatch_groups(self._take_triggered())
         return req
 
     def submit_sweep(self, template: CircuitTemplate,
@@ -239,15 +363,21 @@ class BatchScheduler:
         A 1-D array is B separate bindings when the template takes one
         parameter, and a single P-parameter binding otherwise.
         """
-        arr = np.asarray(params_matrix, np.float32)
-        if arr.ndim == 1:
-            arr = (arr.reshape(-1, 1) if template.num_params == 1
-                   else arr.reshape(1, -1))
-        if arr.ndim != 2 or arr.shape[1] != template.num_params:
-            raise ValueError(
-                f"{template.name}: params matrix must be "
-                f"[B, {template.num_params}], got {tuple(arr.shape)}")
-        return [self.submit(template, row) for row in arr]
+        return [self.submit(template, row)
+                for row in validate_sweep(template, params_matrix)]
+
+    def wait_for_work(self, timeout: float | None = None) -> bool:
+        """Block until submissions are queued (condition variable, no spin).
+
+        Returns True if work is queued, False on timeout.  This is the
+        drain-loop primitive that replaces polling ``pending`` in a busy
+        loop: producers signal the condition on every ``submit``.
+        """
+        with self._work:
+            if self._groups:
+                return True
+            self._work.wait(timeout)
+            return bool(self._groups)
 
     # -- grouping -------------------------------------------------------------
     def _plan_key(self, req: Request) -> tuple:
@@ -259,21 +389,34 @@ class BatchScheduler:
 
     def _take_groups(self) -> list[list[Request]]:
         """Dequeue all pending requests, grouped by plan key in FIFO order."""
-        groups = list(self._groups.values())
-        # dequeue before executing: a failing chunk must not leave its (or
-        # other groups') requests queued for a silent re-run on the next drain
-        self._groups = {}
+        with self._lock:
+            groups = list(self._groups.values())
+            # dequeue before executing: a failing chunk must not leave its (or
+            # other groups') requests queued for a silent re-run on the next
+            # drain
+            self._groups = {}
         return groups
 
-    def _poll_triggers(self) -> None:
-        """Streaming dispatch: launch any group that is full or has aged out."""
-        now = time.perf_counter()
-        for key, reqs in list(self._groups.items()):
-            full = len(reqs) >= self.max_batch
-            aged = (now - reqs[0].submitted) * 1e3 >= self.max_wait_ms
-            if full or aged:
-                del self._groups[key]
-                self._dispatch_group(reqs)
+    def _take_triggered(self, force: bool = False) -> list[list[Request]]:
+        """Dequeue every group that is full or has aged out (all if force)."""
+        with self._lock:
+            now = self._clock()
+            fired = []
+            for key, reqs in list(self._groups.items()):
+                full = len(reqs) >= self.max_batch
+                aged = (self.max_wait_ms is not None and
+                        (now - reqs[0].submitted) * 1e3 >= self.max_wait_ms)
+                if force or full or aged:
+                    del self._groups[key]
+                    fired.append(reqs)
+        return fired
+
+    def _dispatch_groups(self, groups: list[list[Request]]) -> list[Request]:
+        out: list[Request] = []
+        for reqs in groups:
+            self._dispatch_group(reqs)
+            out += reqs
+        return out
 
     # -- dispatch -------------------------------------------------------------
     def _dispatch_group(self, reqs: list[Request],
@@ -288,7 +431,13 @@ class BatchScheduler:
         return launched
 
     def _dispatch_chunk(self, chunk: list[Request]) -> InFlightBatch | None:
-        """Launch one chunk non-blocking; FAILED (never raised) on error."""
+        """Launch one chunk non-blocking; FAILED (never raised) on error.
+
+        The slow part — plan resolution and program dispatch — runs outside
+        the scheduler lock (the executor serializes compiles itself), so
+        producers are never blocked behind an XLA compile; only the window
+        and lifecycle mutations are guarded.
+        """
         template = chunk[0].template
         pm = np.stack([r.params for r in chunk])
         b = len(chunk)
@@ -298,18 +447,54 @@ class BatchScheduler:
         try:
             plan, raw = self.executor.dispatch_batch(template, pm)
         except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
-            _fail(chunk, e, self.stats)
+            _fail(chunk, e, self.stats, self._clock())
             return None
-        self.stats.padded_slots += padded - b
-        self.stats.batches += 1
-        batch = InFlightBatch(plan, chunk, raw, self.stats)
-        for req in chunk:
-            req.state = RequestState.DISPATCHED
-            req._batch = batch
-        self._window.append(batch)
-        while len(self._window) > self.inflight:
-            self._window.popleft().finalize()
+        self.stats.add_batch(padded - b)
+        batch = InFlightBatch(plan, chunk, raw, self.stats, clock=self._clock)
+        overflow: list[InFlightBatch] = []
+        with self._lock:
+            for req in chunk:
+                req._transition(RequestState.DISPATCHED)
+                req._batch = batch
+            self._window.append(batch)
+            while len(self._window) > self.inflight:
+                overflow.append(self._window.popleft())
+        for old in overflow:
+            old.finalize()
         return batch
+
+    def poll(self, force: bool = False) -> list[InFlightBatch]:
+        """One non-blocking drain step (the ingest drain-loop primitive).
+
+        Launches every plan group that is full or (under ``max_wait_ms``)
+        has aged out — all queued groups when ``force`` — then retires any
+        in-flight batch whose device results are already available
+        (``InFlightBatch.ready``), oldest first.  Never blocks on the
+        device: a batch still executing stays in the window.  Returns the
+        newly launched batches.
+        """
+        launched: list[InFlightBatch] = []
+        for reqs in self._take_triggered(force):
+            launched += self._dispatch_group(reqs)
+        while True:
+            with self._lock:
+                if not (self._window and self._window[0].ready):
+                    break
+                batch = self._window.popleft()
+            batch.finalize()
+        return launched
+
+    def retire_one(self) -> bool:
+        """Finalize the oldest in-flight batch, blocking until its device
+        results land; False if the window is empty.  Drain loops call this
+        when there is nothing left to launch — it converts idle host time
+        into result delivery instead of a spin."""
+        with self._lock:
+            if not self._window:
+                return False
+            batch = self._window.popleft()
+        batch.finalize()
+        return True
 
     def drain(self) -> list[Request]:
         """Synchronously flush the queue: every returned request is terminal.
@@ -324,28 +509,36 @@ class BatchScheduler:
         self.sync()
         return completed
 
-    def drain_async(self) -> list[Request]:
+    def drain_async(self, wait_ms: float | None = None) -> list[Request]:
         """Launch everything queued without retiring the in-flight window.
 
         Returned requests are ``DISPATCHED`` (or already terminal); host-side
         grouping/padding/staging of each batch overlaps device execution of
         the previous ones.  Retire with ``sync()`` or per-request ``wait()``.
+
+        ``wait_ms`` bounds a condition-variable wait for submissions when
+        the queue is empty (a drain loop calling ``drain_async`` in a loop
+        must never busy-spin while requests are merely in flight); ``None``
+        returns immediately.
         """
-        dispatched: list[Request] = []
-        for reqs in self._take_groups():
-            self._dispatch_group(reqs)
-            dispatched += reqs
-        return dispatched
+        if wait_ms is not None and not self._groups:
+            self.wait_for_work(wait_ms / 1e3)
+        return self._dispatch_groups(self._take_groups())
 
     def sync(self) -> None:
         """Retire every in-flight batch (oldest first)."""
-        while self._window:
-            self._window.popleft().finalize()
+        while True:
+            with self._lock:
+                if not self._window:
+                    return
+                batch = self._window.popleft()
+            batch.finalize()
 
     # -- reporting ------------------------------------------------------------
     def report(self) -> dict:
         out = self.stats.summary()
-        out["inflight"] = len([b for b in self._window if not b.finalized])
+        with self._lock:
+            out["inflight"] = len([b for b in self._window if not b.finalized])
         out.update({f"cache_{k}": v
                     for k, v in self.executor.stats.as_dict().items()})
         # per-class fused-gate counts of the plans serving this traffic, so

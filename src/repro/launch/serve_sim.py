@@ -3,14 +3,19 @@
 Simulates a serving workload of parameterized-circuit requests (QAOA sweeps,
 hardware-efficient-ansatz evaluations, fixed benchmark circuits), pushes them
 through the request scheduler — synchronously (``--mode sync``: every batch
-blocks before the next launches) or as the async streaming pipeline
+blocks before the next launches), as the async streaming pipeline
 (``--mode async``: host-side batch formation overlaps device execution under
-an ``--inflight``-deep window) — and reports throughput, latency percentiles,
-failure counts, padding overhead, and plan-cache statistics.
+an ``--inflight``-deep window), or through the concurrent ingest front end
+(``--mode ingest``: ``--clients K`` producer threads submit through
+``IngestServer`` while its drain loop batches and dispatches) — and reports
+throughput, latency percentiles, failure counts, padding overhead, and
+plan-cache statistics.
 
   PYTHONPATH=src python -m repro.launch.serve_sim --qubits 10 --requests 128
   PYTHONPATH=src python -m repro.launch.serve_sim --mode async --inflight 2 \
       --backend pallas --workload qaoa --requests 64 --max-batch 32
+  PYTHONPATH=src python -m repro.launch.serve_sim --mode ingest --clients 4 \
+      --max-wait-ms 2 --requests 128
 """
 from __future__ import annotations
 
@@ -21,8 +26,10 @@ import numpy as np
 
 from repro.core import circuits as C
 from repro.core.target import get_target
-from repro.engine import (BatchExecutor, BatchScheduler, hea_template,
-                          qaoa_template, template_of)
+from repro.engine import (BatchExecutor, BatchScheduler, IngestRejected,
+                          IngestServer, hea_template, qaoa_template,
+                          template_of)
+from repro.testing import run_producers
 
 
 def _make_traffic(workload: str, n: int, requests: int, seed: int):
@@ -56,6 +63,32 @@ def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
     return time.perf_counter() - t0
 
 
+def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
+                  max_pending: int, policy: str) -> tuple[float, dict]:
+    """K concurrent client threads through the ingest front end; returns
+    wall seconds and the server report (scheduler + ingest_* fields)."""
+    srv = IngestServer(scheduler=sched, max_pending=max_pending,
+                       policy=policy)
+    chunks = [traffic[i::clients] for i in range(clients)]
+    starts: list = []
+
+    def client(i: int) -> None:
+        starts.append(time.perf_counter())    # right after the barrier
+        for template, params in chunks[i]:
+            try:
+                srv.submit(template, params)
+            except IngestRejected:
+                pass    # shed load, keep serving; the server counts these
+                        # (ingest_rejected in the report)
+
+    run_producers(clients, client, timeout=600)
+    srv.drain()
+    dt = time.perf_counter() - min(starts)
+    rep = srv.report()
+    srv.close()
+    return dt, rep
+
+
 def _print_report(rep: dict, dt: float, label: str, args,
                   cache=None) -> None:
     print(f"[{label}] served {rep['requests']} requests in {dt:.3f}s "
@@ -71,6 +104,12 @@ def _print_report(rep: dict, dt: float, label: str, args,
         print(f"[{label}] no completed requests -> no latency stats")
     print(f"[{label}] plan cache: {rep['cache_compiles']} compiles, "
           f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
+    if "ingest_producers" in rep:
+        print(f"[{label}] ingest: producers={rep['ingest_producers']} "
+              f"rejected={rep['ingest_rejected']} "
+              f"outstanding={rep['ingest_outstanding']} "
+              f"(policy={rep['ingest_policy']}, "
+              f"max_pending={rep['ingest_max_pending']})")
     if getattr(args, "stats", False):
         print(f"[{label}] fused gates by class: "
               f"diagonal={rep.get('gates_diagonal', 0)} "
@@ -94,11 +133,22 @@ def main(argv=None):
                     choices=["dense", "planar", "pallas"])
     ap.add_argument("--target", default="cpu_test")
     ap.add_argument("--max-batch", type=int, default=64)
-    ap.add_argument("--mode", default="async", choices=["sync", "async"],
+    ap.add_argument("--mode", default="async",
+                    choices=["sync", "async", "ingest"],
                     help="sync: drain() blocks per batch; async: streaming "
-                         "pipeline with an in-flight window")
+                         "pipeline with an in-flight window; ingest: "
+                         "--clients concurrent producer threads through "
+                         "IngestServer's drain loop")
     ap.add_argument("--inflight", type=int, default=2,
-                    help="async mode: max launched-but-unretired batches")
+                    help="async/ingest: max launched-but-unretired batches")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="ingest mode: number of concurrent producer threads")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="ingest mode: backpressure window (submitted but "
+                         "unresolved requests)")
+    ap.add_argument("--policy", default="block", choices=["block", "reject"],
+                    help="ingest mode: producers block for a pending slot, "
+                         "or get IngestRejected to shed load")
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="streaming dispatch: launch a plan group once its "
                          "oldest request has waited this long (default: "
@@ -129,14 +179,23 @@ def main(argv=None):
                              specialize=args.specialize == "on",
                              mesh=args.mesh,
                              max_local_qubits=args.max_local_qubits)
+    # ingest mode streams by default (2ms age-out) — without a trigger the
+    # drain loop would hold every underfull group until the final drain()
+    max_wait_ms = args.max_wait_ms
+    if max_wait_ms is None and args.mode == "ingest":
+        max_wait_ms = 2.0
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
-                           max_wait_ms=args.max_wait_ms)
+                           max_wait_ms=max_wait_ms)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
 
-    dt = _serve(sched, traffic, args.mode)
-    rep = sched.report()
+    if args.mode == "ingest":
+        dt, rep = _serve_ingest(sched, traffic, max(1, args.clients),
+                                args.max_pending, args.policy)
+    else:
+        dt = _serve(sched, traffic, args.mode)
+        rep = sched.report()
     _print_report(rep, dt, args.mode, args, cache=executor.cache)
 
     if args.compare_sync:

@@ -1,1 +1,2 @@
-"""Test-support utilities (dependency fallbacks, helpers)."""
+"""Test-support utilities (dependency fallbacks, concurrency helpers)."""
+from repro.testing.concurrency import FakeClock, alarm, run_producers  # noqa: F401

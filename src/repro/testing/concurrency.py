@@ -1,0 +1,105 @@
+"""Deterministic concurrency-test machinery.
+
+Three pieces make ingest/scheduler races reproducible under pytest:
+
+* :class:`FakeClock` — an injectable, manually advanced time source.  The
+  scheduler and ingest server take ``clock=``; a test steps the drain loop
+  by hand (``IngestServer(autostart=False)`` + ``step()``) and advances the
+  clock between steps, so aging triggers and latency stamps are exact
+  functions of the test script, not of wall time.
+* :func:`run_producers` — barrier-synchronized multi-producer harness: K
+  threads all block on one barrier, then hit the submission path at the
+  same instant (the worst-case interleaving window), and the first
+  exception from any producer is re-raised in the test.
+* :func:`alarm` — an in-repo SIGALRM watchdog so a deadlocked concurrency
+  test fails fast with a stack-carrying ``TimeoutError`` instead of
+  hanging the CI job (the fallback behind the ``timeout`` pytest marker
+  when ``pytest-timeout`` is not installed).
+"""
+from __future__ import annotations
+
+import contextlib
+import signal
+import threading
+
+
+class FakeClock:
+    """Manually advanced monotonic clock, safe to read from any thread.
+
+    Call the instance to read the current time (``clock()``), ``advance``
+    to move it forward; negative advances are rejected so tests cannot
+    accidentally build a non-monotonic timeline.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"FakeClock only moves forward (dt={dt})")
+        with self._lock:
+            self._now += dt
+            return self._now
+
+
+def run_producers(k: int, fn, *, timeout: float = 60.0) -> list:
+    """Run ``fn(i)`` on ``k`` barrier-synchronized threads; return results.
+
+    Every thread waits on a shared barrier before calling ``fn``, so all
+    producers enter the code under test in the same instant — the densest
+    interleaving a GIL runtime can produce.  Joins with ``timeout`` (a
+    stuck producer raises rather than hanging the test) and re-raises the
+    first producer exception.  Results are ordered by producer index.
+    """
+    barrier = threading.Barrier(k)
+    results: list = [None] * k
+    errors: list = []
+
+    def body(i: int) -> None:
+        try:
+            barrier.wait(timeout)
+            results[i] = fn(i)
+        except BaseException as e:  # noqa: BLE001 — reported to the test
+            errors.append(e)
+
+    threads = [threading.Thread(target=body, args=(i,), daemon=True)
+               for i in range(k)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout)
+        if t.is_alive():
+            raise TimeoutError(
+                f"producer thread {t.name} still running after {timeout}s "
+                f"(deadlock in the code under test?)")
+    if errors:
+        raise errors[0]
+    return results
+
+
+@contextlib.contextmanager
+def alarm(seconds: float):
+    """SIGALRM watchdog: raise ``TimeoutError`` in the main thread after
+    ``seconds``.  Main-thread only (a signal constraint), no-op where
+    SIGALRM is unavailable (non-POSIX) — pytest-timeout covers those."""
+    if (not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def fire(signum, frame):
+        raise TimeoutError(f"test exceeded the {seconds}s alarm "
+                           f"(deadlocked ingest/drain loop?)")
+
+    old = signal.signal(signal.SIGALRM, fire)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)

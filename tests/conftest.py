@@ -16,7 +16,40 @@ except ModuleNotFoundError:
 import numpy as np
 import pytest
 
+from repro.testing import alarm
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(1234)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): fail the test after N seconds.  Served by the "
+        "pytest-timeout plugin when installed; otherwise by the in-repo "
+        "SIGALRM watchdog (repro.testing.alarm), so a deadlocked "
+        "ingest/scheduler test fails fast instead of hanging the job.")
+
+
+@pytest.fixture(autouse=True)
+def _marker_timeout(request):
+    """In-repo fallback for ``@pytest.mark.timeout(N)``.
+
+    Defers to the real pytest-timeout plugin when present (it handles the
+    marker itself, including non-main-thread cases); otherwise arms a
+    SIGALRM for the marked duration around the test body.
+    """
+    marker = request.node.get_closest_marker("timeout")
+    if marker is None or request.config.pluginmanager.hasplugin("timeout"):
+        yield
+        return
+    # positional or keyword — pytest-timeout spells the kwarg "timeout"
+    seconds = (marker.args[0] if marker.args
+               else marker.kwargs.get("timeout", marker.kwargs.get("seconds")))
+    if seconds is None:
+        yield
+        return
+    with alarm(float(seconds)):
+        yield

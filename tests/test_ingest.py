@@ -1,0 +1,565 @@
+"""Concurrent ingest front end: stress, property, fake-clock, backpressure.
+
+The concurrency suite leans on the machinery in ``repro.testing``:
+barrier-synchronized producers (``run_producers``) make interleavings as
+dense as the GIL allows, ``FakeClock`` + ``IngestServer(autostart=False)``
+make aging triggers and latencies deterministic, and every test that could
+deadlock carries a ``timeout`` marker (pytest-timeout when installed, the
+in-repo SIGALRM watchdog otherwise).
+
+Bitwise-equality methodology: a vmapped batch row is *not* bitwise equal to
+the single-run jit (different XLA fusion, ~1e-8 drift), but a row of the
+same compiled executable is bitwise stable regardless of which other rows
+share its batch.  The stress test therefore keeps every batch exactly
+``max_batch`` full (producer counts aligned, aging off) and replays the
+identical traffic through a single-threaded scheduler on the same plan
+cache — same executables, so concurrency must change nothing, bit for bit.
+The ``Simulator.run`` oracle then pins numerical correctness at 1e-5.
+"""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gates as G
+from repro.core.circuits import Circuit
+from repro.core.simulator import Simulator
+from repro.core.target import CPU_TEST
+from repro.engine import (BatchExecutor, BatchScheduler, IngestClosed,
+                          IngestRejected, IngestServer, PlanCache,
+                          RequestState, hea_template, qaoa_template)
+from repro.engine.template import CircuitTemplate, TemplateOp, template_of
+from repro.testing import FakeClock, run_producers
+
+VALID_HISTORIES = (
+    [RequestState.QUEUED, RequestState.DISPATCHED, RequestState.DONE],
+    [RequestState.QUEUED, RequestState.DISPATCHED, RequestState.FAILED],
+    [RequestState.QUEUED, RequestState.FAILED],
+)
+
+
+def _dense(state) -> np.ndarray:
+    return np.asarray(state.to_dense())
+
+
+def _broken_template(n: int = 4) -> CircuitTemplate:
+    """Execution genuinely raises: matrix shape disagrees with arity."""
+    return CircuitTemplate(
+        n, (TemplateOp("fixed", (0,), matrix=np.eye(4, dtype=np.complex64)),),
+        num_params=0, name="broken")
+
+
+# -- multi-producer stress: no drops, no dups, bitwise-stable results ----------
+
+@pytest.mark.timeout(300)
+def test_concurrent_stress_no_drops_no_dups_bitwise_vs_oracle():
+    """8 barrier-synchronized producers x 3 template structures through
+    IngestServer: zero dropped/duplicated request ids, every lifecycle
+    history strictly monotonic, results bitwise-equal to a single-threaded
+    replay on the same executables and 1e-5-equal to Simulator.run."""
+    templates = [qaoa_template(5, 1), qaoa_template(5, 2), hea_template(5, 1)]
+    per_producer = 6                       # 8 * 6 = 48; 16 per template
+    max_batch = 4                          # every batch exactly full
+    cache = PlanCache()
+    ex = BatchExecutor(backend="planar", cache=cache)
+    srv = IngestServer(ex, max_batch=max_batch, max_wait_ms=60_000.0)
+
+    def producer(i: int):
+        rng = np.random.default_rng(100 + i)
+        out = []
+        for j in range(per_producer):
+            t = templates[j % len(templates)]
+            out.append(srv.submit(t, rng.uniform(-np.pi, np.pi,
+                                                 t.num_params)))
+        return out
+
+    handles = [h for hs in run_producers(8, producer, timeout=240)
+               for h in hs]
+    assert srv.flush(timeout=240)
+    srv.close()
+
+    assert len(handles) == 48
+    results = [h.result(timeout=1) for h in handles]
+    assert all(h.request is not None and h.request.ok for h in handles)
+    # no dropped or duplicated requests: ids and tickets are both unique
+    assert len({h.request.req_id for h in handles}) == 48
+    assert len({h.seq for h in handles}) == 48
+    # lifecycle monotonicity, enforced history per request
+    for h in handles:
+        assert h.request.history == VALID_HISTORIES[0]
+    rep = srv.report()
+    assert rep["requests"] == 48 and rep["failed"] == 0
+    assert rep["batches"] == 12 and rep["padded_slots"] == 0
+    assert rep["ingest_outstanding"] == 0
+
+    # bitwise oracle: identical traffic, ticket order, single thread, same
+    # plan cache -> same compiled executables -> identical bits
+    replay = BatchScheduler(BatchExecutor(backend="planar", cache=cache),
+                            max_batch=max_batch)
+    ordered = sorted(handles, key=lambda h: h.seq)
+    replay_reqs = [replay.submit(h.template, h.params) for h in ordered]
+    replay.drain()
+    for h, r in zip(ordered, replay_reqs):
+        assert r.ok
+        assert np.array_equal(_dense(h.result()), _dense(r.result)), \
+            f"concurrent result for seq {h.seq} differs from replay"
+
+    # numerical oracle: the single-threaded simulator path
+    sim = Simulator(CPU_TEST, backend="planar", plan_cache=cache)
+    for h, state in zip(handles, results):
+        ref = sim.run(h.request.template, params=h.request.params)
+        np.testing.assert_allclose(_dense(state), _dense(ref), atol=1e-5)
+
+
+@pytest.mark.timeout(120)
+def test_scheduler_stats_exact_under_8_submitters():
+    """Regression: SchedulerStats counters were racy under concurrent
+    submitters (lost increments).  8 barrier-synced threads hammering
+    submit must account for every request exactly."""
+    ex = BatchExecutor(backend="planar", cache=PlanCache())
+    sched = BatchScheduler(ex, max_batch=64)        # no streaming triggers
+    t = qaoa_template(4, 1)
+    per_thread = 25
+
+    def producer(i: int):
+        rng = np.random.default_rng(i)
+        return [sched.submit(t, rng.uniform(-1, 1, 2))
+                for _ in range(per_thread)]
+
+    reqs = [r for rs in run_producers(8, producer) for r in rs]
+    assert sched.stats.requests == 200
+    assert len(sched.pending) == 200
+    assert len({r.req_id for r in reqs}) == 200
+    done = sched.drain()
+    assert len(done) == 200 and all(r.ok for r in reqs)
+    # 200 -> chunks of 64,64,64,8: the 8-chunk pads to 8 (pow2), no slack
+    assert sched.stats.batches == 4 and sched.stats.padded_slots == 0
+    assert len(sched.stats.latencies) == 200
+
+
+@pytest.mark.timeout(120)
+def test_plan_cache_counters_exact_under_8_threads():
+    """Regression: PlanCache hit/miss/eviction accounting was racy.  8
+    threads resolving 3 structures through a 2-entry cache must balance
+    the books exactly: hits + misses == calls, compiles == misses,
+    compiles - evictions == live entries."""
+    cache = PlanCache(max_plans=2)
+    templates = [qaoa_template(4, 1), qaoa_template(4, 2),
+                 hea_template(4, 1)]
+    per_thread = 30
+
+    def hammer(i: int):
+        for j in range(per_thread):
+            t = templates[(i + j) % len(templates)]
+            cache.get_or_compile(t, backend="planar", target=CPU_TEST,
+                                 f=None, fuse=True, interpret=True)
+        return per_thread
+
+    run_producers(8, hammer)
+    s = cache.stats.as_dict()
+    total = 8 * per_thread
+    assert s["hits"] + s["misses"] == total
+    assert s["compiles"] == s["misses"]
+    assert s["compiles"] - s["evictions"] == len(cache) == 2
+    assert s["evictions"] >= 1                     # 3 structures, cap 2
+
+
+# -- drain-loop primitives: condition wait, poll, retire ----------------------
+
+@pytest.mark.timeout(60)
+def test_wait_for_work_condition_variable():
+    sched = BatchScheduler(BatchExecutor(backend="planar", cache=PlanCache()))
+    t0 = time.perf_counter()
+    assert not sched.wait_for_work(timeout=0.05)   # idle: timed wait, False
+    assert time.perf_counter() - t0 < 5.0
+    threading.Timer(0.1, lambda: sched.submit(qaoa_template(4, 1),
+                                              [0.1, 0.2])).start()
+    assert sched.wait_for_work(timeout=30.0)       # woken by the submit
+    assert len(sched.pending) == 1
+
+
+@pytest.mark.timeout(60)
+def test_drain_async_waits_on_cv_instead_of_spinning():
+    """Regression: a drain loop calling drain_async with an empty queue but
+    requests in flight must block on the condition variable (bounded by
+    wait_ms), not spin; a submission landing mid-wait is dispatched."""
+    ex = BatchExecutor(backend="planar", cache=PlanCache())
+    sched = BatchScheduler(ex, max_batch=4)
+    t = qaoa_template(4, 1)
+    threading.Timer(0.15, lambda: sched.submit(t, [0.3, 0.4])).start()
+    t0 = time.perf_counter()
+    dispatched = sched.drain_async(wait_ms=30_000.0)
+    waited = time.perf_counter() - t0
+    assert len(dispatched) == 1 and waited < 29.0  # woke early, not timeout
+    sched.sync()
+    assert dispatched[0].ok
+    # empty queue + wait_ms: returns after the bounded wait, no requests
+    t0 = time.perf_counter()
+    assert sched.drain_async(wait_ms=50.0) == []
+    assert time.perf_counter() - t0 < 5.0
+
+
+@pytest.mark.timeout(120)
+def test_poll_launches_full_groups_and_retires_ready_batches():
+    ex = BatchExecutor(backend="planar", cache=PlanCache())
+    sched = BatchScheduler(ex, max_batch=2)        # no max_wait_ms
+    t = qaoa_template(4, 1)
+    a = sched.submit(t, [0.1, 0.2])
+    assert sched.poll() == []                      # 1 < max_batch, no aging
+    b = sched.submit(t, [0.3, 0.4])
+    launched = sched.poll()                        # full group fires
+    assert len(launched) == 1
+    assert a.state == RequestState.DISPATCHED
+    launched[0].finalize()
+    assert sched.poll() == [] and a.ok and b.ok    # retire path idempotent
+    c = sched.submit(t, [0.5, 0.6])
+    assert sched.poll(force=True) and c.state != RequestState.QUEUED
+    sched.sync()
+    assert c.ok
+    assert not sched.retire_one()                  # window empty
+
+
+# -- deterministic fake-clock stepping ----------------------------------------
+
+@pytest.mark.timeout(120)
+def test_fake_clock_aging_trigger_deterministic():
+    """max_wait_ms aging is an exact function of the fake clock: one step
+    below the threshold keeps the group queued, crossing it dispatches."""
+    clock = FakeClock()
+    ex = BatchExecutor(backend="planar", cache=PlanCache())
+    srv = IngestServer(ex, max_batch=16, max_wait_ms=5.0, clock=clock,
+                       autostart=False)
+    t = qaoa_template(4, 1)
+    handles = [srv.submit(t, [0.1 * i, 0.2]) for i in range(3)]
+    srv.step()
+    assert len(srv.scheduler.pending) == 3         # ingested, not aged
+    assert all(h.request.state == RequestState.QUEUED for h in handles)
+    clock.advance(0.0049)
+    srv.step()
+    assert len(srv.scheduler.pending) == 3         # 4.9ms < 5ms: still queued
+    clock.advance(0.0002)
+    srv.step()                                     # 5.1ms: group aged out
+    assert srv.scheduler.pending == []
+    assert srv.flush(timeout=60)
+    for h in handles:
+        assert h.request.ok and h.request.history == VALID_HISTORIES[0]
+        # latency stamped off the fake clock: exactly the aging delay
+        assert h.request.latency == pytest.approx(0.0051)
+
+
+@pytest.mark.timeout(120)
+def test_fake_clock_full_group_dispatches_without_aging():
+    clock = FakeClock()
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=2, max_wait_ms=60_000.0, clock=clock,
+                       autostart=False)
+    t = qaoa_template(4, 1)
+    hs = [srv.submit(t, [0.1, 0.2]), srv.submit(t, [0.3, 0.4])]
+    srv.step()                                     # full trigger, zero aging
+    assert srv.scheduler.pending == []
+    assert srv.flush(timeout=60)
+    assert all(h.request.ok for h in hs)
+    srv.close()
+
+
+# -- backpressure --------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_backpressure_reject_policy():
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=4, max_pending=2, policy="reject",
+                       autostart=False)
+    t = qaoa_template(4, 1)
+    a, b = srv.submit(t, [0.1, 0.2]), srv.submit(t, [0.3, 0.4])
+    with pytest.raises(IngestRejected, match="pending window full"):
+        srv.submit(t, [0.5, 0.6])
+    assert srv.report()["ingest_rejected"] == 1
+    assert srv.flush(timeout=60)                   # resolves a, b -> slots free
+    c = srv.submit(t, [0.5, 0.6])
+    assert srv.flush(timeout=60)
+    assert all(h.result(timeout=1) is not None for h in (a, b, c))
+    srv.close()
+
+
+@pytest.mark.timeout(120)
+def test_backpressure_block_policy_unblocks_when_slot_frees():
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=4, max_wait_ms=1.0, max_pending=2,
+                       policy="block")
+    t = qaoa_template(4, 1)
+
+    def producer(i: int):
+        rng = np.random.default_rng(i)
+        return [srv.submit(t, rng.uniform(-1, 1, 2)) for _ in range(5)]
+
+    # 4 producers x 5 requests through a 2-slot window: every submit beyond
+    # the window blocks until the drain loop frees a slot
+    handles = [h for hs in run_producers(4, producer) for h in hs]
+    assert srv.flush(timeout=120)
+    srv.close()
+    assert len(handles) == 20
+    assert all(h.request.ok for h in handles)
+    assert srv.report()["ingest_rejected"] == 0
+
+
+# -- shutdown / validation / failure ------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_close_flushes_inflight_and_rejects_new_submissions():
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=8, max_wait_ms=60_000.0)
+    t = qaoa_template(4, 1)
+    handles = [srv.submit(t, [0.1 * i, -0.2]) for i in range(5)]
+    srv.close()                                    # flushes the underfull group
+    assert all(h.done() and h.request.ok for h in handles)
+    with pytest.raises(IngestClosed):
+        srv.submit(t, [0.0, 0.0])
+    srv.close()                                    # idempotent
+
+
+@pytest.mark.timeout(60)
+def test_submit_validation_raises_in_caller_thread():
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       autostart=False)
+    with pytest.raises(ValueError, match="expected 2 params"):
+        srv.submit(qaoa_template(4, 1), [0.1, 0.2, 0.3])
+    with pytest.raises(ValueError, match="params matrix"):
+        srv.submit_sweep(qaoa_template(4, 1), np.zeros((2, 3)))
+    assert srv.report()["ingest_outstanding"] == 0
+    with pytest.raises(ValueError, match="policy"):
+        IngestServer(policy="dropit")
+
+
+@pytest.mark.timeout(120)
+def test_failed_batch_surfaces_on_handle_other_requests_survive():
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=4, max_wait_ms=60_000.0)
+    good = srv.submit(qaoa_template(5, 1), [0.3, -0.4])
+    bad = srv.submit(_broken_template())
+    srv.close()
+    assert good.request.ok and good.result() is not None
+    assert bad.request.state == RequestState.FAILED
+    assert bad.request.history in VALID_HISTORIES
+    with pytest.raises(Exception):
+        bad.result()
+    assert isinstance(bad.exception(), Exception)
+
+
+@pytest.mark.timeout(120)
+def test_submit_sweep_through_ingest_matches_scheduler_sweep():
+    cache = PlanCache()
+    srv = IngestServer(BatchExecutor(backend="planar", cache=cache),
+                       max_batch=8, max_wait_ms=1.0)
+    t = qaoa_template(4, 1)
+    pm = np.linspace(-1.0, 1.0, 6).reshape(3, 2).astype(np.float32)
+    handles = srv.submit_sweep(t, pm)
+    states = [h.result(timeout=120) for h in handles]
+    srv.close()
+    sched = BatchScheduler(BatchExecutor(backend="planar", cache=cache),
+                           max_batch=8)
+    refs = sched.submit_sweep(t, pm)
+    sched.drain()
+    for s, r in zip(states, refs):
+        assert np.array_equal(_dense(s), _dense(r.result))
+
+
+@pytest.mark.timeout(60)
+def test_sweep_backpressure_exception_carries_partial_handles():
+    """A mid-sweep rejection must not orphan already-accepted rows: the
+    exception carries their handles so the caller can await/retry without
+    duplicating work."""
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=4, max_pending=2, policy="reject",
+                       autostart=False)
+    t = qaoa_template(4, 1)
+    with pytest.raises(IngestRejected) as exc:
+        srv.submit_sweep(t, np.zeros((4, 2), np.float32))
+    partial = exc.value.partial_handles
+    assert len(partial) == 2
+    assert srv.flush(timeout=60)                   # accepted rows execute
+    assert all(h.request.ok for h in partial)
+    srv.close()
+
+
+@pytest.mark.timeout(60)
+def test_drain_loop_crash_fails_outstanding_handles_loudly():
+    """Regression: an exception escaping the drain loop must not leave
+    result() hanging forever — outstanding handles fail with the cause,
+    intake closes, and flush() still returns."""
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=8, max_wait_ms=60_000.0)
+
+    def boom(force=False):
+        raise RuntimeError("injected drain failure")
+
+    srv.scheduler.poll = boom
+    h = srv.submit(qaoa_template(4, 1), [0.1, 0.2])
+    with pytest.raises(Exception, match="drain loop crashed"):
+        h.result(timeout=60)
+    assert srv.flush(timeout=60)                   # outstanding went to 0
+    with pytest.raises(IngestClosed):
+        srv.submit(qaoa_template(4, 1), [0.1, 0.2])
+    srv.close()                                    # still clean + idempotent
+
+
+# -- asyncio-native path -------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_asyncio_submit_and_await():
+    cache = PlanCache()
+    t = qaoa_template(5, 1)
+    rng = np.random.default_rng(7)
+    pm = rng.uniform(-np.pi, np.pi, (6, 2)).astype(np.float32)
+
+    async def main():
+        srv = IngestServer(BatchExecutor(backend="planar", cache=cache),
+                           max_batch=4, max_wait_ms=1.0)
+        handles = [await srv.submit_async(t, row) for row in pm]
+        states = list(await asyncio.gather(*handles))
+        extra = await srv.run_async(t, pm[0])      # submit+await convenience
+        srv.close()
+        return states, extra
+
+    states, extra = asyncio.run(main())
+    sim = Simulator(CPU_TEST, backend="planar", plan_cache=cache)
+    for row, state in zip(pm, states):
+        np.testing.assert_allclose(_dense(state), _dense(sim.run(t, params=row)),
+                                   atol=1e-5)
+    np.testing.assert_allclose(_dense(extra), _dense(states[0]), atol=1e-6)
+
+
+@pytest.mark.timeout(120)
+def test_cancelled_awaited_handle_does_not_crash_server():
+    """Regression: an asyncio client abandoning a handle (wait_for timeout
+    cancels the wrapped future) must not kill the drain loop or leak the
+    backpressure slot — the server keeps serving everyone else."""
+    srv = IngestServer(BatchExecutor(backend="planar", cache=PlanCache()),
+                       max_batch=4, max_wait_ms=1.0, max_pending=4)
+    t = qaoa_template(4, 1)
+
+    async def _await(handle):
+        return await handle
+
+    async def main():
+        h = await srv.submit_async(t, [0.1, 0.2])
+        try:
+            await asyncio.wait_for(_await(h), timeout=1e-6)
+        except asyncio.TimeoutError:
+            pass                                   # h._future now cancelled
+        # the server must still serve new work after the abandonment
+        return await srv.run_async(t, [0.3, 0.4])
+
+    assert asyncio.run(main()) is not None
+    assert srv._loop_error is None                 # loop survived
+    assert srv.flush(timeout=60)                   # no leaked slots/counts
+    assert srv.report()["ingest_outstanding"] == 0
+    srv.close()
+
+
+# -- property-based differential tests ----------------------------------------
+
+def _random_class_circuit(rng, n, num_gates, mix):
+    """Random circuit drawn from a class mix: diag / perm / general pools."""
+    gates = []
+    for _ in range(num_gates):
+        q = int(rng.integers(0, n))
+        q2 = int((q + 1 + rng.integers(0, n - 1)) % n)
+        kind = mix[int(rng.integers(0, len(mix)))]
+        if kind == "diag":
+            gates.append([G.z(q), G.s(q), G.rz(q, float(rng.uniform(0, 6))),
+                          G.cz(q, q2), G.cphase(q, q2, float(rng.uniform(0, 3)))]
+                         [int(rng.integers(0, 5))])
+        elif kind == "perm":
+            gates.append([G.x(q), G.cnot(q, q2), G.swap(q, q2)]
+                         [int(rng.integers(0, 3))])
+        else:
+            gates.append([G.h(q), G.rx(q, float(rng.uniform(0, 6))),
+                          G.ry(q, float(rng.uniform(0, 6)))]
+                         [int(rng.integers(0, 3))])
+    return Circuit(n, gates)
+
+
+# shared across examples so the parameterized qaoa/hea plans compile once
+_PROP_CACHE = PlanCache()
+
+
+@pytest.mark.timeout(300)
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10**6),
+       mix=st.sampled_from([("diag",), ("perm",), ("diag", "perm"),
+                            ("diag", "perm", "general")]))
+def test_property_random_interleavings_match_dense_oracle(seed, mix):
+    """Property: any interleaving of submit / submit_sweep / drain /
+    drain_async / poll over random diag/perm/mixed circuits produces, for
+    every request, the dense-oracle state.  Seed is logged for replay."""
+    print(f"[ingest-property] replay with seed={seed} mix={mix}")
+    rng = np.random.default_rng(seed)
+    n = 5
+    templates = [template_of(_random_class_circuit(rng, n, 8, mix)),
+                 qaoa_template(n, 1), hea_template(n, 1)]
+    sched = BatchScheduler(BatchExecutor(backend="planar",
+                                         cache=_PROP_CACHE),
+                           max_batch=4, inflight=2)
+    reqs = []
+    for _ in range(int(rng.integers(4, 9))):
+        op = int(rng.integers(0, 5))
+        t = templates[int(rng.integers(0, len(templates)))]
+        if op == 0:
+            reqs.append(sched.submit(
+                t, rng.uniform(-1, 1, t.num_params)))
+        elif op == 1 and t.num_params:
+            reqs += sched.submit_sweep(
+                t, rng.uniform(-1, 1, (2, t.num_params)))
+        elif op == 2:
+            sched.drain()
+        elif op == 3:
+            sched.drain_async()
+        else:
+            sched.poll(force=bool(rng.integers(0, 2)))
+    sched.drain()
+    sched.sync()
+    oracle = Simulator(CPU_TEST, backend="dense", plan_cache=PlanCache())
+    for r in reqs:
+        assert r.ok, f"seed={seed}: request {r.req_id} ended {r.state}"
+        ref = oracle.run(r.template, params=r.params)
+        np.testing.assert_allclose(
+            _dense(r.result), _dense(ref), atol=2e-5,
+            err_msg=f"seed={seed} mix={mix} req={r.req_id}")
+
+
+@pytest.mark.timeout(300)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_property_fake_clock_ingest_steps_match_dense_oracle(seed):
+    """Property: random fake-clock step/advance schedules through the
+    IngestServer deliver every submission with the dense-oracle state and a
+    monotonic lifecycle, whatever the drain stepping looks like."""
+    print(f"[ingest-property] replay with seed={seed}")
+    rng = np.random.default_rng(seed)
+    clock = FakeClock()
+    srv = IngestServer(BatchExecutor(backend="planar", cache=_PROP_CACHE),
+                       max_batch=4, max_wait_ms=2.0, clock=clock,
+                       autostart=False)
+    templates = [qaoa_template(5, 1), hea_template(5, 1)]
+    handles = []
+    for _ in range(int(rng.integers(5, 11))):
+        op = int(rng.integers(0, 4))
+        if op <= 1:
+            t = templates[int(rng.integers(0, len(templates)))]
+            handles.append(srv.submit(
+                t, rng.uniform(-1, 1, t.num_params)))
+        elif op == 2:
+            clock.advance(float(rng.uniform(0, 0.004)))
+            srv.step()
+        else:
+            srv.step(force=bool(rng.integers(0, 2)))
+    assert srv.flush(timeout=120)
+    oracle = Simulator(CPU_TEST, backend="dense", plan_cache=PlanCache())
+    for h in handles:
+        assert h.request.ok and h.request.history == VALID_HISTORIES[0]
+        ref = oracle.run(h.template, params=h.params)
+        np.testing.assert_allclose(_dense(h.result()), _dense(ref),
+                                   atol=2e-5, err_msg=f"seed={seed}")
