@@ -15,7 +15,7 @@ from benchmarks import (batch_throughput, concurrent_ingest, fig6_overall,
                         fig10_fusion, fig11_ai, fig12_ablation, fig13_scaling,
                         fig14_projection, gate_classes, roofline,
                         serve_mixed, sharded_batch, tab3_gate_ops,
-                        tab4_vectorization)
+                        tab4_vectorization, telemetry_overhead)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -32,6 +32,7 @@ MODULES = {
     "ingest": concurrent_ingest,
     "classes": gate_classes,
     "sharded": sharded_batch,
+    "telemetry": telemetry_overhead,
 }
 
 

@@ -13,6 +13,11 @@ from repro.engine.plan import (  # noqa: F401
     CompiledPlan, PlanCache, PlanItem, CacheStats, compile_plan,
     resolve_diag_f, PARAM_OP_CLASS, GLOBAL_PLAN_CACHE,
 )
+from repro.engine.telemetry import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, NULL_TRACER, ServedActivity,
+    Span, SpanTracer, VectorizationProfile, engine_registry,
+    vectorization_profile,
+)
 from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
     BatchScheduler, InFlightBatch, Request, RequestState, SchedulerStats,

@@ -31,6 +31,7 @@ from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.target import CPU_TEST, Target
 from repro.engine.plan import CacheStats, CompiledPlan, PlanCache
+from repro.engine.telemetry import ServedActivity
 from repro.engine.template import CircuitTemplate, template_of
 
 
@@ -51,6 +52,9 @@ class BatchExecutor:
     def __post_init__(self):
         if self.cache is None:
             self.cache = PlanCache()
+        # served vectorization activity, aggregated per plan key: what lane
+        # occupancy / fast-path coverage the dispatched traffic actually ran
+        self.activity = ServedActivity()
         # ingest lock discipline: the executor is shared by every producer
         # thread and the drain loop.  Plan resolution is serialized inside
         # PlanCache (one compile per structure, exact counters), per-plan
@@ -124,7 +128,10 @@ class BatchExecutor:
         semantics between ``run`` and ``dispatch_batch``.
         """
         if self._device_pool is None:
-            return self.plan_for(template).run(params=params, initial=initial)
+            plan = self.plan_for(template)
+            out = plan.run(params=params, initial=initial)
+            self.activity.record(plan, 1)
+            return out
         if isinstance(template, Circuit):
             template = template_of(template)
         pm = (np.zeros((1, template.num_params), np.float32) if params is None
@@ -156,6 +163,10 @@ class BatchExecutor:
         if isinstance(template, Circuit):
             template = template_of(template)
         plan = self.plan_for(template)
+        # rows include any scheduler padding: this counts what the device is
+        # asked to run.  Recorded *before* the launch so the accounting never
+        # sits between enqueue and the caller's first readiness check
+        self.activity.record(plan, params_matrix.shape[0])
         if self._device_pool is None:
             return plan, plan.run_batch_raw(params_matrix, initial=initial)
         if initial is not None:
@@ -193,6 +204,7 @@ class BatchExecutor:
         pm = jnp.broadcast_to(plan._params_array(params),
                               (len(initials), plan.num_params))
         out = plan.run_batch_raw(pm, initial_batch=data0)
+        self.activity.record(plan, len(initials))
         return [plan._wrap(out[b]) for b in range(out.shape[0])]
 
     # -- stats ----------------------------------------------------------------

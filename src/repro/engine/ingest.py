@@ -50,6 +50,7 @@ from repro.core.circuits import Circuit
 from repro.engine.batch import BatchExecutor
 from repro.engine.scheduler import (BatchScheduler, Request, validate_params,
                                     validate_sweep)
+from repro.engine.telemetry import STAGE_ENQUEUE
 from repro.engine.template import CircuitTemplate
 
 BLOCK = "block"      # producers wait for a pending slot (default)
@@ -79,7 +80,8 @@ class IngestHandle:
     lifecycle ``history``, latency).
     """
 
-    __slots__ = ("seq", "template", "params", "request", "_future")
+    __slots__ = ("seq", "template", "params", "request", "enqueue_ts",
+                 "_future")
 
     def __init__(self, seq: int, template: CircuitTemplate,
                  params: np.ndarray):
@@ -87,6 +89,7 @@ class IngestHandle:
         self.template = template
         self.params = params
         self.request: Request | None = None   # set by the drain loop
+        self.enqueue_ts: float | None = None  # lane-append stamp (traced runs)
         self._future: concurrent.futures.Future = concurrent.futures.Future()
 
     def done(self) -> bool:
@@ -142,8 +145,11 @@ class IngestServer:
     deterministic-batching mode) — ``max_pending`` + ``policy`` the
     backpressure window.  With
     a pre-built ``scheduler=``, the scheduler-owned knobs (``max_batch``,
-    ``inflight``, ``max_wait_ms``, ``clock``) must be configured on it —
-    passing them here raises rather than silently losing them.
+    ``inflight``, ``max_wait_ms``, ``clock``, ``tracer``) must be configured
+    on it — passing them here raises rather than silently losing them.
+    ``tracer`` (a :class:`~repro.engine.telemetry.SpanTracer`) extends the
+    scheduler's request spans back to the producer-side lane append, so a
+    trace shows the ingest wait ahead of queueing and dispatch.
     ``autostart=False`` skips the background thread so tests drive
     :meth:`step` deterministically.
     """
@@ -155,6 +161,7 @@ class IngestServer:
                  max_pending: int = 1024,
                  policy: str = BLOCK,
                  clock: Callable[[], float] | None = None,
+                 tracer=None,
                  autostart: bool = True):
         if policy not in (BLOCK, REJECT):
             raise ValueError(f"policy must be {BLOCK!r} or {REJECT!r}, "
@@ -168,7 +175,8 @@ class IngestServer:
             # scheduler owns
             ignored = [name for name, val in (("max_batch", max_batch),
                                               ("inflight", inflight),
-                                              ("clock", clock))
+                                              ("clock", clock),
+                                              ("tracer", tracer))
                        if val is not None]
             if max_wait_ms is not _UNSET:
                 ignored.append("max_wait_ms")
@@ -188,7 +196,10 @@ class IngestServer:
                 # default 2ms streaming age-out; an explicit None means
                 # dispatch on fullness only (drain()/close() flush the rest)
                 max_wait_ms=2.0 if max_wait_ms is _UNSET else max_wait_ms,
-                clock=clock)
+                clock=clock, tracer=tracer)
+        # the scheduler owns the tracer (one span record per engine); the
+        # server only extends its spans back to the producer-side lane append
+        self.tracer = self.scheduler.tracer
         # None = the scheduler has no aging trigger: underfull groups wait
         # for drain()/close(); the loop then only ticks for result delivery
         self.max_wait_ms = self.scheduler.max_wait_ms
@@ -320,6 +331,10 @@ class IngestServer:
             raise IngestRejected(f"pending window full ({self.max_pending}); "
                                  f"policy={self.policy!r}")
         handle = IngestHandle(next(self._seq), template, p)
+        if self.tracer.enabled:
+            # producer-side stamp off the scheduler clock; recorded against
+            # the req_id once the drain loop merges this ticket
+            handle.enqueue_ts = self.scheduler.clock()
         lane = self._lane()
         # counted before the append so flush() can never observe a resolved
         # handle ahead of its own increment
@@ -425,6 +440,9 @@ class IngestServer:
                 self._live[h.seq] = h
             for h in collected:
                 h.request = self.scheduler.submit(h.template, h.params)
+                if self.tracer.enabled and h.enqueue_ts is not None:
+                    self.tracer.record(h.request.req_id, STAGE_ENQUEUE,
+                                       h.enqueue_ts, seq=h.seq)
             self.scheduler.poll(force=force)
             return self._deliver()
 
@@ -527,16 +545,24 @@ class IngestServer:
         self._final_sweep()
 
     # -- reporting ------------------------------------------------------------
+    def ingest_counters(self) -> dict:
+        """The front end's own counters, unprefixed — the registry source
+        behind :func:`repro.engine.telemetry.engine_registry`'s
+        ``ingest_*`` keys (and this server's :meth:`report`)."""
+        with self._mutex:
+            out = {
+                "producers": len(self._lanes),
+                "rejected": self._rejected,
+                "max_pending": self.max_pending,
+                "policy": self.policy,
+            }
+        with self._done:
+            out["outstanding"] = self._outstanding
+        return out
+
     def report(self) -> dict:
         """Scheduler + cache report extended with ingest-front-end fields."""
         out = self.scheduler.report()
-        with self._mutex:
-            out.update({
-                "ingest_producers": len(self._lanes),
-                "ingest_rejected": self._rejected,
-                "ingest_max_pending": self.max_pending,
-                "ingest_policy": self.policy,
-            })
-        with self._done:
-            out["ingest_outstanding"] = self._outstanding
+        out.update({f"ingest_{k}": v
+                    for k, v in self.ingest_counters().items()})
         return out

@@ -49,6 +49,7 @@ from repro.core.fusion import choose_f, cluster_gates, realize_cluster
 from repro.core.gates import (Gate, expand_unitary, gate_class,
                               monomial_decompose)
 from repro.core.target import Target, row_budget
+from repro.engine.telemetry import Histogram, vectorization_profile
 from repro.engine.template import PARAM_KINDS, CircuitTemplate, TemplateOp
 
 # Structural class of a parameterized op, valid for *every* angle — the dummy
@@ -764,6 +765,10 @@ class CompiledPlan:
     specialize: bool = True
     state_bits: int = 0              # state-sharding degree the plan targets
     compile_seconds: float = 0.0
+    # static vectorization profile (ALO/ORR/AI/fast-path coverage), computed
+    # once by compile_plan via repro.engine.telemetry.vectorization_profile
+    profile: "object | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
     batch_compiles: int = 0
     batch_evictions: int = 0
     sharded_swaps: int | None = None  # all_to_alls traced by the last sharded build
@@ -1264,6 +1269,9 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
     plan = CompiledPlan(template=template, backend=backend, target=target,
                         f=f_eff, interpret=interpret, items=items,
                         specialize=specialize, state_bits=state_bits)
+    # static vectorization profile, computed once here (inside the timed
+    # region: it is part of the compile, and compile_seconds attributes it)
+    plan.profile = vectorization_profile(plan, dummy.gates, target)
     plan.compile_seconds = time.perf_counter() - t0
     return plan
 
@@ -1283,13 +1291,35 @@ class CacheStats:
     compiles: int = 0
     evictions: int = 0
     batch_evictions: int = 0     # per-plan batched-executable LRU evictions
+    compile_seconds: float = 0.0  # total wall time spent in compile_plan
 
     def __post_init__(self):
         self._lock = threading.Lock()
+        # bounded per-compile sample window for the percentile attribution;
+        # the compile_seconds total above stays exact over every compile
+        self._compile_hist = Histogram(1024, name="compile_seconds")
 
     def bump(self, name: str, k: int = 1) -> None:
         with self._lock:
             setattr(self, name, getattr(self, name) + k)
+
+    def record_compile(self, seconds: float) -> None:
+        """Attribute one compile_plan invocation's wall time."""
+        with self._lock:
+            self.compile_seconds += seconds
+        self._compile_hist.record(seconds)
+
+    def compile_summary(self) -> dict:
+        """Total + percentile compile-time attribution; empty before the
+        first compile (an idle cache reports no fabricated 0.0s)."""
+        s = self._compile_hist.summary()
+        if not s:
+            return {}
+        with self._lock:
+            total = self.compile_seconds
+        return {"seconds_total": total, "count": s["count"],
+                "seconds_mean": s["mean"], "seconds_p50": s["p50"],
+                "seconds_p95": s["p95"], "seconds_max": s["max"]}
 
     def as_dict(self) -> dict:
         with self._lock:
@@ -1359,6 +1389,7 @@ class PlanCache:
                                 specialize=specialize, state_bits=state_bits)
             plan.cache_stats = self.stats
             self.stats.bump("compiles")
+            self.stats.record_compile(plan.compile_seconds)
             self._plans[key] = plan
             while len(self._plans) > self.max_plans:
                 self._plans.popitem(last=False)

@@ -52,7 +52,14 @@ import numpy as np
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.engine.batch import BatchExecutor
+from repro.engine.telemetry import (Histogram, NULL_TRACER, STAGE_DEVICE_READY,
+                                    STAGE_DISPATCH, STAGE_DONE, STAGE_FAILED,
+                                    STAGE_SUBMIT)
 from repro.engine.template import CircuitTemplate, template_of
+
+# retained latency samples for percentile estimates; totals stay exact
+# (Histogram keeps count/sum/min/max over every sample forever)
+LATENCY_WINDOW = 4096
 
 
 class RequestState:
@@ -181,13 +188,20 @@ class SchedulerStats:
     batches never lose an increment; ``summary()`` snapshots under the same
     lock.  (The lock lives outside the dataclass fields so equality/repr
     semantics are unchanged.)
+
+    ``latencies`` is a bounded :class:`~repro.engine.telemetry.Histogram`
+    (carrying its own lock): a long-running serve holds fixed memory —
+    count and mean stay exact over every request ever served, while the
+    p50/p99 estimates cover the most recent ``LATENCY_WINDOW`` samples.
+    ``len(stats.latencies)`` is still the total recorded count.
     """
 
     requests: int = 0
     batches: int = 0
     padded_slots: int = 0
     failed: int = 0
-    latencies: list = dataclasses.field(default_factory=list)
+    latencies: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(LATENCY_WINDOW, name="latency"))
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -206,12 +220,10 @@ class SchedulerStats:
             self.failed += 1
 
     def add_latency(self, seconds: float) -> None:
-        with self._lock:
-            self.latencies.append(seconds)
+        self.latencies.record(seconds)
 
     def summary(self) -> dict:
         with self._lock:
-            lat = np.asarray(self.latencies) if self.latencies else None
             out = {
                 "requests": self.requests,
                 "batches": self.batches,
@@ -220,11 +232,12 @@ class SchedulerStats:
             }
         # no latency keys at all for an idle scheduler — a fabricated 0.0 ms
         # percentile is indistinguishable from a genuinely fast one
-        if lat is not None:
+        lat = self.latencies.summary()
+        if lat:
             out.update({
-                "latency_mean_ms": float(lat.mean() * 1e3),
-                "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "latency_mean_ms": lat["mean"] * 1e3,
+                "latency_p50_ms": lat["p50"] * 1e3,
+                "latency_p99_ms": lat["p99"] * 1e3,
             })
         return out
 
@@ -234,12 +247,14 @@ class InFlightBatch:
 
     def __init__(self, plan, requests: list[Request], raw,
                  stats: SchedulerStats,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer=NULL_TRACER):
         self.plan = plan
         self.requests = requests
         self.raw = raw                   # unwaited device array [padded, ...]
         self.stats = stats
         self.clock = clock
+        self.tracer = tracer
         self.finalized = False
         self._flock = threading.Lock()   # finalize is idempotent *and* racy-
                                          # safe: wait() callers vs drain loop
@@ -264,7 +279,8 @@ class InFlightBatch:
                 jax.block_until_ready(self.raw)
             except Exception as e:  # noqa: BLE001 — device-side failure
                 self.raw = None
-                _fail(self.requests, e, self.stats, self.clock())
+                _fail(self.requests, e, self.stats, self.clock(),
+                      tracer=self.tracer)
                 return
             now = self.clock()
             states = self.plan.wrap_batch(self.raw, count=len(self.requests))
@@ -274,10 +290,17 @@ class InFlightBatch:
                 req._transition(RequestState.DONE)
                 self.stats.add_latency(req.latency)
             self.raw = None
+            if self.tracer.enabled:
+                # device retire at ``now`` (the latency stamp), finalize —
+                # host-side wrap + lifecycle transitions — ends here
+                end = self.clock()
+                for req in self.requests:
+                    self.tracer.record(req.req_id, STAGE_DEVICE_READY, now)
+                    self.tracer.record(req.req_id, STAGE_DONE, end)
 
 
 def _fail(requests: list[Request], error: Exception,
-          stats: SchedulerStats, now: float) -> None:
+          stats: SchedulerStats, now: float, tracer=NULL_TRACER) -> None:
     """Terminal FAILED transition: record error + latency, never re-raise.
 
     Failure latencies stay on the Request only — mixing time-to-failure into
@@ -288,6 +311,9 @@ def _fail(requests: list[Request], error: Exception,
         req.latency = now - req.submitted
         req._transition(RequestState.FAILED)
         stats.add_failure()
+        if tracer.enabled:
+            tracer.record(req.req_id, STAGE_FAILED, now,
+                          error=type(error).__name__)
 
 
 class BatchScheduler:
@@ -305,13 +331,19 @@ class BatchScheduler:
     loops (:class:`repro.engine.ingest.IngestServer`) block on
     :meth:`wait_for_work` instead of busy-spinning.  ``clock`` injects the
     time source used for submit stamps, aging triggers, and latencies
-    (default ``time.perf_counter``; tests pass a fake).
+    (default ``time.perf_counter``; tests pass a fake).  ``tracer`` is a
+    :class:`~repro.engine.telemetry.SpanTracer` recording per-request
+    lifecycle events (submit → dispatch → device retire → finalize) off the
+    same clock; the default :data:`~repro.engine.telemetry.NULL_TRACER` is
+    disabled and every instrumentation site is gated on ``tracer.enabled``,
+    so an untraced scheduler does zero telemetry work.
     """
 
     def __init__(self, executor: BatchExecutor | None = None,
                  max_batch: int = 64, pad_to_pow2: bool = True,
                  inflight: int = 2, max_wait_ms: float | None = None,
-                 clock: Callable[[], float] | None = None):
+                 clock: Callable[[], float] | None = None,
+                 tracer=None):
         if inflight < 0:
             raise ValueError(f"inflight must be >= 0, got {inflight}")
         self.executor = executor if executor is not None else BatchExecutor()
@@ -320,8 +352,10 @@ class BatchScheduler:
         self.inflight = inflight
         self.max_wait_ms = max_wait_ms
         self.stats = SchedulerStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._clock = clock if clock is not None else time.perf_counter
         self._ids = itertools.count()
+        self._batch_ids = itertools.count()
         # one lock guards the queue + window; the condition variable is
         # signalled on every submit so drain loops can sleep between bursts
         self._lock = threading.RLock()
@@ -351,6 +385,10 @@ class BatchScheduler:
                           submitted=self._clock())
             self._groups.setdefault(self._plan_key(req), []).append(req)
             self._work.notify_all()
+        if self.tracer.enabled:
+            # the submit stamp doubles as the span start: no extra clock read
+            self.tracer.record(req.req_id, STAGE_SUBMIT, req.submitted,
+                               template=template.name)
         self.stats.add_request()
         if self.max_wait_ms is not None:
             self._dispatch_groups(self._take_triggered())
@@ -447,10 +485,17 @@ class BatchScheduler:
         try:
             plan, raw = self.executor.dispatch_batch(template, pm)
         except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
-            _fail(chunk, e, self.stats, self._clock())
+            _fail(chunk, e, self.stats, self._clock(), tracer=self.tracer)
             return None
         self.stats.add_batch(padded - b)
-        batch = InFlightBatch(plan, chunk, raw, self.stats, clock=self._clock)
+        if self.tracer.enabled:
+            bid = next(self._batch_ids)
+            now = self._clock()
+            for req in chunk:
+                self.tracer.record(req.req_id, STAGE_DISPATCH, now,
+                                   batch=bid, rows=b, padded=padded)
+        batch = InFlightBatch(plan, chunk, raw, self.stats, clock=self._clock,
+                              tracer=self.tracer)
         overflow: list[InFlightBatch] = []
         with self._lock:
             for req in chunk:
@@ -541,6 +586,10 @@ class BatchScheduler:
             out["inflight"] = len([b for b in self._window if not b.finalized])
         out.update({f"cache_{k}": v
                     for k, v in self.executor.stats.as_dict().items()})
+        # compile-time attribution: total/percentile seconds spent compiling
+        # plans for this traffic (absent until the first compile)
+        out.update({f"compile_{k}": v
+                    for k, v in self.executor.stats.compile_summary().items()})
         # per-class fused-gate counts of the plans serving this traffic, so
         # specialization coverage is trackable alongside throughput
         out.update({f"gates_{cls}": c

@@ -16,6 +16,12 @@ plan-cache statistics.
       --backend pallas --workload qaoa --requests 64 --max-batch 32
   PYTHONPATH=src python -m repro.launch.serve_sim --mode ingest --clients 4 \
       --max-wait-ms 2 --requests 128
+
+Telemetry (docs/OBSERVABILITY.md): ``--trace FILE`` records every request's
+lifecycle span and writes a Chrome-trace/Perfetto JSON (``--trace-jsonl`` the
+raw event log), ``--metrics-json FILE`` exports the unified metrics-registry
+snapshot, and ``--stats`` adds the served vectorization-activity report
+(ALO/ORR/fast-path coverage per plan key).
 """
 from __future__ import annotations
 
@@ -27,8 +33,8 @@ import numpy as np
 from repro.core import circuits as C
 from repro.core.target import get_target
 from repro.engine import (BatchExecutor, BatchScheduler, IngestRejected,
-                          IngestServer, hea_template, qaoa_template,
-                          template_of)
+                          IngestServer, SpanTracer, engine_registry,
+                          hea_template, qaoa_template, template_of)
 from repro.testing import run_producers
 
 
@@ -64,9 +70,11 @@ def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
 
 
 def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
-                  max_pending: int, policy: str) -> tuple[float, dict]:
+                  max_pending: int, policy: str,
+                  ) -> tuple[float, dict, IngestServer]:
     """K concurrent client threads through the ingest front end; returns
-    wall seconds and the server report (scheduler + ingest_* fields)."""
+    wall seconds, the server report (scheduler + ingest_* fields), and the
+    (closed) server — its counters stay readable for the metrics export."""
     srv = IngestServer(scheduler=sched, max_pending=max_pending,
                        policy=policy)
     chunks = [traffic[i::clients] for i in range(clients)]
@@ -86,11 +94,11 @@ def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
     dt = time.perf_counter() - min(starts)
     rep = srv.report()
     srv.close()
-    return dt, rep
+    return dt, rep, srv
 
 
 def _print_report(rep: dict, dt: float, label: str, args,
-                  cache=None) -> None:
+                  cache=None, activity=None) -> None:
     print(f"[{label}] served {rep['requests']} requests in {dt:.3f}s "
           f"({rep['requests'] / dt:.1f} circuits/s) "
           f"in {rep['batches']} batches, backend={args.backend}, "
@@ -104,6 +112,12 @@ def _print_report(rep: dict, dt: float, label: str, args,
         print(f"[{label}] no completed requests -> no latency stats")
     print(f"[{label}] plan cache: {rep['cache_compiles']} compiles, "
           f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
+    if "compile_seconds_total" in rep:
+        print(f"[{label}] compile time: "
+              f"total={rep['compile_seconds_total'] * 1e3:.1f}ms over "
+              f"{rep['compile_count']} compiles "
+              f"(p50={rep['compile_seconds_p50'] * 1e3:.1f}ms "
+              f"max={rep['compile_seconds_max'] * 1e3:.1f}ms)")
     if "ingest_producers" in rep:
         print(f"[{label}] ingest: producers={rep['ingest_producers']} "
               f"rejected={rep['ingest_rejected']} "
@@ -121,6 +135,16 @@ def _print_report(rep: dict, dt: float, label: str, args,
                   f"{fl['flops_per_amp_actual']:.0f} specialized vs "
                   f"{fl['flops_per_amp_generic']:.0f} generic "
                   f"({fl['flops_saved_frac'] * 100:.1f}% saved)")
+        if activity is not None:
+            # served vectorization activity: what the dispatched traffic
+            # actually ran, amplitude-weighted per plan key (the serving-
+            # side analogue of the paper's Table IV)
+            for key, a in activity.per_plan().items():
+                print(f"[{label}] served {key}: rows={a['rows']} "
+                      f"batches={a['batches']} alo={a['alo']:.1f} "
+                      f"orr={a['orr']:.1f} ai={a['ai']:.2f} "
+                      f"fast_amp={a['fast_amp_frac'] * 100:.0f}% "
+                      f"flops_saved={a['flops_saved_frac'] * 100:.0f}%")
 
 
 def main(argv=None):
@@ -165,8 +189,19 @@ def main(argv=None):
                     help="gate-class-specialized plan lowering (diagonal/"
                          "permutation fast paths)")
     ap.add_argument("--stats", action="store_true",
-                    help="report per-class fused-gate counts and the "
-                         "estimated flops saved by specialization")
+                    help="report per-class fused-gate counts, the estimated "
+                         "flops saved by specialization, and served "
+                         "vectorization activity (ALO/ORR) per plan key")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record per-request lifecycle spans and write a "
+                         "Chrome-trace/Perfetto JSON file (open in "
+                         "https://ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="FILE",
+                    help="also/instead write the raw span events as a "
+                         "JSONL structured log (one event per line)")
+    ap.add_argument("--metrics-json", default=None, metavar="FILE",
+                    help="export the unified metrics-registry snapshot "
+                         "(scheduler/cache/compile/served/ingest) as JSON")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compare-sync", action="store_true",
                     help="also run the same traffic through a fresh "
@@ -184,19 +219,37 @@ def main(argv=None):
     max_wait_ms = args.max_wait_ms
     if max_wait_ms is None and args.mode == "ingest":
         max_wait_ms = 2.0
+    # tracing is opt-in: without --trace/--trace-jsonl the scheduler keeps
+    # the disabled NULL_TRACER and does zero telemetry work
+    tracer = SpanTracer() if (args.trace or args.trace_jsonl) else None
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
-                           max_wait_ms=max_wait_ms)
+                           max_wait_ms=max_wait_ms, tracer=tracer)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
 
+    srv = None
     if args.mode == "ingest":
-        dt, rep = _serve_ingest(sched, traffic, max(1, args.clients),
-                                args.max_pending, args.policy)
+        dt, rep, srv = _serve_ingest(sched, traffic, max(1, args.clients),
+                                     args.max_pending, args.policy)
     else:
         dt = _serve(sched, traffic, args.mode)
         rep = sched.report()
-    _print_report(rep, dt, args.mode, args, cache=executor.cache)
+    _print_report(rep, dt, args.mode, args, cache=executor.cache,
+                  activity=executor.activity)
+
+    if tracer is not None:
+        if args.trace:
+            count = tracer.write_chrome_trace(args.trace)
+            print(f"[trace] wrote {count} request spans -> {args.trace} "
+                  f"(summarize: python tools/trace_report.py {args.trace})")
+        if args.trace_jsonl:
+            n_events = tracer.write_jsonl(args.trace_jsonl)
+            print(f"[trace] wrote {n_events} events -> {args.trace_jsonl}")
+    if args.metrics_json:
+        reg = engine_registry(scheduler=sched, executor=executor, server=srv)
+        snap = reg.write_json(args.metrics_json)
+        print(f"[metrics] wrote {len(snap)} fields -> {args.metrics_json}")
 
     if args.compare_sync:
         sync_sched = BatchScheduler(
@@ -212,6 +265,11 @@ def main(argv=None):
         sync_rep = sync_sched.report()
         for k, v in before.items():
             sync_rep[f"cache_{k}"] -= v
+        if sync_rep["cache_compiles"] == 0:
+            # warm plans by construction: the cumulative compile_* summary
+            # belongs to the async phase, not this delta report
+            sync_rep = {k: v for k, v in sync_rep.items()
+                        if not k.startswith("compile_")}
         _print_report(sync_rep, sync_dt, "sync", args, cache=executor.cache)
         print(f"{args.mode}(cold) vs sync(warm) speedup: "
               f"{sync_dt / dt:.2f}x "

@@ -212,7 +212,9 @@ def test_poll_launches_full_groups_and_retires_ready_batches():
     b = sched.submit(t, [0.3, 0.4])
     launched = sched.poll()                        # full group fires
     assert len(launched) == 1
-    assert a.state == RequestState.DISPATCHED
+    # poll() also retires device-ready batches, and a tiny batch can finish
+    # before poll returns — dispatched OR already done, but never queued
+    assert a.state != RequestState.QUEUED
     launched[0].finalize()
     assert sched.poll() == [] and a.ok and b.ok    # retire path idempotent
     c = sched.submit(t, [0.5, 0.6])

@@ -1,0 +1,165 @@
+"""Summarize a serve_sim trace file (Chrome-trace JSON or JSONL event log).
+
+Reads the file ``serve_sim --trace`` (or ``--trace-jsonl``) wrote, validates
+the export format, and prints where the traffic's latency went: request
+count and status mix, per-stage duration percentiles (ingest.wait,
+sched.queue, device.execute, finalize), and the slowest requests.  Exits
+non-zero on a malformed trace — CI runs this on the smoke benchmark's
+emitted trace as the format check.
+
+  python tools/trace_report.py trace.json
+  python tools/trace_report.py events.jsonl --top 5
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+
+
+STAGE_ORDER = ["ingest.wait", "sched.queue", "device.execute", "finalize"]
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, round(q / 100 * (len(sorted_vals) - 1))))
+    return sorted_vals[int(idx)]
+
+
+def load_chrome_trace(obj: dict) -> list[dict]:
+    """Validate a Chrome-trace object; returns its complete ("X") events."""
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("not a Chrome-trace file: missing 'traceEvents'")
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("'traceEvents' must be a list")
+    spans = []
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            continue                      # metadata (process_name etc.)
+        if ph != "X":
+            raise ValueError(f"event {i}: unsupported phase {ph!r} "
+                             f"(expected complete 'X' events)")
+        for field in ("name", "ts", "dur", "pid", "tid"):
+            if field not in ev:
+                raise ValueError(f"event {i}: missing field {field!r}")
+        if ev["dur"] < 0:
+            raise ValueError(f"event {i} ({ev['name']}): negative duration")
+        spans.append(ev)
+    return spans
+
+
+def load_jsonl(lines: list[str]) -> list[dict]:
+    """Convert a JSONL event log into the same span shape as chrome_trace.
+
+    The JSONL log holds point events (stage + ts per req_id); stage spans
+    are reconstructed from consecutive lifecycle stages per request.
+    """
+    events_by_req: dict = collections.defaultdict(dict)
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        ev = json.loads(line)
+        for field in ("req_id", "stage", "ts"):
+            if field not in ev:
+                raise ValueError(f"line {i + 1}: missing field {field!r}")
+        if ev["stage"] in events_by_req[ev["req_id"]]:
+            raise ValueError(f"line {i + 1}: duplicate stage "
+                             f"{ev['stage']!r} for request {ev['req_id']}")
+        events_by_req[ev["req_id"]][ev["stage"]] = ev["ts"]
+    spans = []
+    edges = [("ingest_enqueue", "submit", "ingest.wait"),
+             ("submit", "dispatch", "sched.queue"),
+             ("dispatch", "device_ready", "device.execute"),
+             ("device_ready", "done", "finalize")]
+    for rid, stages in sorted(events_by_req.items()):
+        if "submit" not in stages:
+            raise ValueError(f"request {rid}: no submit event")
+        end_stage = "done" if "done" in stages else "failed"
+        if end_stage not in stages:
+            raise ValueError(f"request {rid}: no terminal event")
+        start = min(stages.values())
+        spans.append({"name": "request", "ts": start * 1e6,
+                      "dur": (stages[end_stage] - start) * 1e6,
+                      "pid": 1, "tid": rid,
+                      "args": {"req_id": rid, "status": end_stage}})
+        for a, b, name in edges:
+            if a in stages and b in stages:
+                spans.append({"name": name, "ts": stages[a] * 1e6,
+                              "dur": (stages[b] - stages[a]) * 1e6,
+                              "pid": 1, "tid": rid, "args": {}})
+    return spans
+
+
+def summarize(spans: list[dict]) -> dict:
+    """Aggregate span durations into the printed report (all times ms)."""
+    roots = [s for s in spans if s["name"] == "request"]
+    if not roots:
+        raise ValueError("trace holds no request spans")
+    by_stage: dict = collections.defaultdict(list)
+    for s in spans:
+        if s["name"] != "request":
+            by_stage[s["name"]].append(s["dur"] / 1e3)
+    durs = sorted(s["dur"] / 1e3 for s in roots)
+    status = collections.Counter(
+        s.get("args", {}).get("status", "?") for s in roots)
+    return {
+        "requests": len(roots),
+        "status": dict(status),
+        "total_ms": {"p50": _percentile(durs, 50),
+                     "p99": _percentile(durs, 99), "max": durs[-1]},
+        "stages": {name: {"count": len(v),
+                          "p50": _percentile(sorted(v), 50),
+                          "p99": _percentile(sorted(v), 99)}
+                   for name, v in by_stage.items()},
+        "slowest": sorted(roots, key=lambda s: -s["dur"]),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace .json or event-log .jsonl "
+                                  "written by serve_sim --trace/--trace-jsonl")
+    ap.add_argument("--top", type=int, default=3,
+                    help="slowest requests to list (default 3)")
+    args = ap.parse_args(argv)
+    with open(args.trace, encoding="utf-8") as fh:
+        text = fh.read()
+    # both formats start with "{": a Chrome trace is one JSON document
+    # carrying "traceEvents", a JSONL log is one JSON object per line
+    try:
+        obj = json.loads(text)
+    except json.JSONDecodeError:
+        obj = None
+    try:
+        if isinstance(obj, dict) and "traceEvents" in obj:
+            spans = load_chrome_trace(obj)
+        else:
+            spans = load_jsonl(text.splitlines())
+        rep = summarize(spans)
+    except (ValueError, json.JSONDecodeError) as e:
+        print(f"ERROR: invalid trace {args.trace!r}: {e}", file=sys.stderr)
+        return 1
+    status = " ".join(f"{k}={v}" for k, v in sorted(rep["status"].items()))
+    t = rep["total_ms"]
+    print(f"{rep['requests']} request spans ({status}); end-to-end ms: "
+          f"p50={t['p50']:.2f} p99={t['p99']:.2f} max={t['max']:.2f}")
+    for name in STAGE_ORDER:
+        st = rep["stages"].get(name)
+        if st:
+            print(f"  {name:<15} count={st['count']:<5} "
+                  f"p50={st['p50']:.2f}ms p99={st['p99']:.2f}ms")
+    for s in rep["slowest"][:args.top]:
+        a = s.get("args", {})
+        print(f"  slowest: req_id={a.get('req_id', '?')} "
+              f"{s['dur'] / 1e3:.2f}ms status={a.get('status', '?')} "
+              f"template={a.get('template', '?')}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
