@@ -21,8 +21,9 @@ BATCHES = (1, 4, 16, 64)
 
 
 def run_backend(backend: str, n: int = N_QUBITS,
-                batches: tuple[int, ...] = BATCHES) -> None:
-    ex = BatchExecutor(target=CPU_TEST, backend=backend)
+                batches: tuple[int, ...] = BATCHES,
+                verify: bool = False) -> None:
+    ex = BatchExecutor(target=CPU_TEST, backend=backend, verify=verify)
     template = qaoa_template(n, LAYERS)
     plan = ex.plan_for(template)
     rng = np.random.default_rng(0)
@@ -62,7 +63,11 @@ if __name__ == "__main__":
                     help="comma-separated batch sizes")
     ap.add_argument("--backend", default="planar",
                     choices=["dense", "planar", "pallas"])
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="run the plan-IR verifier on every compile "
+                         "(repro.analysis; CI smoke mode)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run_backend(args.backend, n=args.qubits,
-                batches=tuple(int(b) for b in args.batches.split(",")))
+                batches=tuple(int(b) for b in args.batches.split(",")),
+                verify=args.verify_plans)

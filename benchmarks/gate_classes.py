@@ -63,7 +63,8 @@ def _workloads(n: int, cost_layers: int):
 
 def run_workload(name: str, template: CircuitTemplate, backend: str,
                  n: int, batch: int = BATCH, iters: int = 5,
-                 specialize_modes=(True, False)) -> dict[bool, float]:
+                 specialize_modes=(True, False),
+                 verify: bool = False) -> dict[bool, float]:
     """Time one workload on one backend for each specialization mode
     (batched throughput through one compiled plan — the engine's native
     execution mode); returns seconds per circuit keyed by mode."""
@@ -73,7 +74,7 @@ def run_workload(name: str, template: CircuitTemplate, backend: str,
     secs: dict[bool, float] = {}
     for spec in specialize_modes:
         ex = BatchExecutor(target=CPU_TEST, backend=backend, specialize=spec,
-                           cache=PlanCache())
+                           cache=PlanCache(), verify=verify)
         plan = ex.plan_for(template)
         secs[spec] = time_fn(plan.run_batch_raw, pm, iters=iters) / batch
         counts = plan.class_counts()
@@ -91,10 +92,11 @@ def run_workload(name: str, template: CircuitTemplate, backend: str,
 
 
 def main(n: int = N_QUBITS, cost_layers: int = COST_LAYERS,
-         backends=BACKENDS, batch: int = BATCH) -> None:
+         backends=BACKENDS, batch: int = BATCH, verify: bool = False) -> None:
     for name, template in _workloads(n, cost_layers):
         for backend in backends:
-            run_workload(name, template, backend, n, batch=batch)
+            run_workload(name, template, backend, n, batch=batch,
+                         verify=verify)
 
 
 if __name__ == "__main__":
@@ -105,7 +107,11 @@ if __name__ == "__main__":
     ap.add_argument("--batch", type=int, default=BATCH)
     ap.add_argument("--backend", default=None, choices=list(BACKENDS),
                     help="restrict to one backend (default: both)")
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="run the plan-IR verifier on every compile "
+                         "(repro.analysis; CI smoke mode)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     main(args.qubits, args.cost_layers,
-         (args.backend,) if args.backend else BACKENDS, batch=args.batch)
+         (args.backend,) if args.backend else BACKENDS, batch=args.batch,
+         verify=args.verify_plans)

@@ -33,7 +33,8 @@ BATCH = 16
 ITERS = 3
 
 
-def _inner(devices: int, qubits: list[int], batch: int, iters: int) -> None:
+def _inner(devices: int, qubits: list[int], batch: int, iters: int,
+           verify: bool = False) -> None:
     """Runs inside the subprocess with the forced device count."""
     import jax
     import numpy as np
@@ -61,7 +62,8 @@ def _inner(devices: int, qubits: list[int], batch: int, iters: int) -> None:
                 return time_fn(lambda: run(), iters=iters) / batch, plan
 
             base_s, _ = bench(BatchExecutor(target=CPU_TEST, backend="planar",
-                                            cache=PlanCache()))
+                                            cache=PlanCache(),
+                                            verify=verify))
             layouts = [("batch", None)]
             if devices > 1:
                 layouts.append(("state", n - (devices.bit_length() - 1)))
@@ -71,7 +73,8 @@ def _inner(devices: int, qubits: list[int], batch: int, iters: int) -> None:
                 else:
                     ex = BatchExecutor(target=CPU_TEST, backend="planar",
                                        cache=PlanCache(), mesh=devices,
-                                       max_local_qubits=max_local)
+                                       max_local_qubits=max_local,
+                                       verify=verify)
                     secs, plan = bench(ex)
                 derived = (f"circuits_per_s={1.0 / secs:.1f};"
                            f"speedup={base_s / secs:.2f}x")
@@ -83,7 +86,7 @@ def _inner(devices: int, qubits: list[int], batch: int, iters: int) -> None:
 
 
 def main(qubits=N_QUBITS, devices=DEVICES, batch: int = BATCH,
-         iters: int = ITERS) -> None:
+         iters: int = ITERS, verify: bool = False) -> None:
     """Spawn one subprocess per device count and stream its CSV rows."""
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     root = os.path.join(os.path.dirname(__file__), "..")
@@ -96,7 +99,8 @@ def main(qubits=N_QUBITS, devices=DEVICES, batch: int = BATCH,
             [sys.executable, "-m", "benchmarks.sharded_batch", "--inner",
              "--devices", str(d),
              "--qubits", ",".join(str(q) for q in qubits),
-             "--batch", str(batch), "--iters", str(iters)],
+             "--batch", str(batch), "--iters", str(iters)]
+            + (["--verify-plans"] if verify else []),
             env=env, cwd=root, capture_output=True, text=True, timeout=1800)
         if out.returncode != 0:
             raise RuntimeError(
@@ -121,12 +125,16 @@ if __name__ == "__main__":
                          f"paper-style sweep is 12-16)")
     ap.add_argument("--batch", type=int, default=BATCH)
     ap.add_argument("--iters", type=int, default=ITERS)
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="run the plan-IR verifier on every compile "
+                         "(repro.analysis; CI smoke mode)")
     args = ap.parse_args()
     qs = ([int(q) for q in args.qubits.split(",")] if args.qubits
           else list(N_QUBITS))
     if args.inner:
-        _inner(int(args.devices), qs, args.batch, args.iters)
+        _inner(int(args.devices), qs, args.batch, args.iters,
+               verify=args.verify_plans)
     else:
         print("name,us_per_call,derived")
         main(qs, [int(d) for d in args.devices.split(",")],
-             batch=args.batch, iters=args.iters)
+             batch=args.batch, iters=args.iters, verify=args.verify_plans)

@@ -1,0 +1,38 @@
+"""Machine-checked invariants for the engine: plan-IR verifier + AST lint.
+
+The paper's single-source VLA design holds together because the lowering
+preserves hard invariants (layout legality, fusion-width budgets, per-class
+vectorization activity — §VII-A); the serving engine's analogue is the
+gate-class plan IR and the concurrency conventions of the scheduler/ingest
+stack.  This package turns both sets of conventions into *machine-checked*
+rules:
+
+* :mod:`repro.analysis.verify_plan` — a structural (and optionally
+  semantic) checker over :class:`~repro.engine.plan.CompiledPlan` /
+  :class:`~repro.engine.plan.PlanItem`: perm bijections, unit-modulus
+  phases, row-budget width caps (the *local* budget for mesh-sharded
+  plans), span hygiene, class-count/flops double-entry accounting, and an
+  opt-in dense-oracle round trip.
+
+* :mod:`repro.analysis.lint` — an AST-based engine lint with stable rule
+  codes (EL001 lock discipline over ``#: guarded-by:`` declarations, EL002
+  raw wall-clock, EL003 tracer gating, EL004 host sync in drain loops,
+  EL005 unseeded randomness in tests) plus a checked-in baseline so
+  accepted pre-existing findings never block CI while new violations fail.
+
+CLI (both run as the CI ``analysis`` job)::
+
+    python -m repro.analysis lint src tests tools
+    python -m repro.analysis verify-plans
+
+See docs/ANALYSIS.md for the rule catalogue and invariant table.
+"""
+from repro.analysis.lint import (Finding, Baseline, lint_paths, lint_source,
+                                 RULES)
+from repro.analysis.verify_plan import (PlanVerificationError, verify_plan,
+                                        INVARIANTS)
+
+__all__ = [
+    "PlanVerificationError", "verify_plan", "INVARIANTS",
+    "Finding", "Baseline", "lint_paths", "lint_source", "RULES",
+]

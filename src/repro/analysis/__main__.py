@@ -1,0 +1,118 @@
+"""CLI for the analysis passes — the CI ``analysis`` job entry point.
+
+::
+
+    python -m repro.analysis lint src tests tools [--baseline FILE]
+                                                  [--update-baseline]
+    python -m repro.analysis verify-plans [--semantic/--no-semantic]
+                                          [--qubits N]
+
+``lint`` exits 1 on any new finding *or* any stale baseline entry;
+``verify-plans`` exits 1 on the first invariant violation, naming the
+template/backend/mesh config and the offending item.  See docs/ANALYSIS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+def _cmd_lint(args) -> int:
+    from repro.analysis.lint import Baseline, lint_paths
+    findings = lint_paths(args.paths)
+    baseline = Baseline.load(args.baseline)
+    new, old, stale = baseline.split(findings)
+    if args.update_baseline:
+        Baseline.save(args.baseline, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+    for f in new:
+        print(f.render())
+    for f in old:
+        print(f"{f.render()}  [baselined]")
+    for e in stale:
+        print(f"STALE baseline entry (no longer fires — remove it or run "
+              f"--update-baseline): {e['path']} {e['rule']} "
+              f"[{e['scope']}] {e['symbol']}")
+    print(f"lint: {len(new)} new, {len(old)} baselined, "
+          f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'}")
+    return 1 if new or stale else 0
+
+
+# (template factory name, builder) — resolved lazily so `lint` never
+# imports jax
+def _template_library(n: int):
+    from repro.core import circuits as C
+    from repro.engine.template import (hea_template, qaoa_template,
+                                       template_of)
+    return [
+        ("qaoa", qaoa_template(n, p=2)),
+        ("hea", hea_template(n, layers=2)),
+        ("grover", template_of(C.grover(n, iterations=1))),
+    ]
+
+
+def _cmd_verify_plans(args) -> int:
+    from repro.analysis.verify_plan import PlanVerificationError, verify_plan
+    from repro.core.target import CPU_TEST
+    from repro.engine.plan import compile_plan
+
+    checked = 0
+    for tname, template in _template_library(args.qubits):
+        for backend in ("dense", "planar", "pallas"):
+            for state_bits in (0, 1, 2):
+                cfg = (f"{tname}/n={template.n}/{backend}/"
+                       f"mesh={1 << state_bits}dev")
+                try:
+                    plan = compile_plan(template, backend=backend,
+                                        target=CPU_TEST, interpret=True,
+                                        state_bits=state_bits)
+                    # semantic round-trip runs the single-device program
+                    # (sharded plans share the item list, so their lowering
+                    # is validated by the same oracle comparison)
+                    verify_plan(plan, semantic=args.semantic)
+                except PlanVerificationError as e:
+                    print(f"FAIL {cfg}: {e}", file=sys.stderr)
+                    return 1
+                checked += 1
+                if args.verbose:
+                    cc = plan.class_counts()
+                    print(f"ok {cfg}: {len(plan.items)} items "
+                          f"(diag={cc['diagonal']} perm={cc['permutation']} "
+                          f"dense={cc['general']})")
+    print(f"verify-plans: {checked} plan configs verified"
+          f"{' (semantic)' if args.semantic else ''}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lint = sub.add_parser("lint", help="run the EL-rule engine lint")
+    lint.add_argument("paths", nargs="+",
+                      help="files/directories to lint (e.g. src tests tools)")
+    lint.add_argument("--baseline", default=DEFAULT_BASELINE)
+    lint.add_argument("--update-baseline", action="store_true",
+                      help="rewrite the baseline to the current finding set")
+    lint.set_defaults(fn=_cmd_lint)
+
+    vp = sub.add_parser("verify-plans",
+                        help="sweep the template library through the "
+                             "plan-IR verifier")
+    vp.add_argument("--qubits", type=int, default=6)
+    vp.add_argument("--semantic", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also round-trip against the dense oracle")
+    vp.add_argument("--verbose", action="store_true")
+    vp.set_defaults(fn=_cmd_verify_plans)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

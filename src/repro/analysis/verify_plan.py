@@ -1,0 +1,302 @@
+"""Structural (and optionally semantic) verifier for the gate-class plan IR.
+
+``compile_plan`` lowers a :class:`~repro.engine.template.CircuitTemplate`
+into :class:`~repro.engine.plan.PlanItem` records whose legality the
+executor *assumes*: permutation items must carry honest bijections, phase
+vectors must stay on the unit circle (or the plan silently un-normalizes
+every state it serves), item widths must respect the row budget that sized
+the backing kernels — the *local* budget for mesh-sharded plans, where an
+oversized phase constant would outgrow the per-device state block.  These
+invariants are the serving analogue of the paper's lowering legality rules
+(layout + fusion-width budgets, §IV); this module makes them machine-checked
+instead of enforced-by-example.
+
+``verify_plan(plan)`` walks every item and raises
+:class:`PlanVerificationError` naming the offending item index, kind, and
+violated invariant.  ``verify_plan(plan, semantic=True)`` additionally
+round-trips the compiled program against the dense gate-by-gate oracle on a
+small random (but fixed-seed) parameter binding.
+
+Wired in as ``compile_plan(..., verify=True)`` /
+``PlanCache.get_or_compile(..., verify=True)`` and the
+``python -m repro.analysis verify-plans`` CLI (see docs/ANALYSIS.md).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import apply as A
+from repro.core.target import row_budget
+from repro.engine.plan import (DIAG_PARAM_COEFF, CompiledPlan, PlanItem,
+                               resolve_diag_f)
+from repro.engine.template import PARAM_KINDS
+
+_UNIT_ATOL = 1e-4       # complex64 phase products drift ~1e-6 per factor
+_SEMANTIC_ATOL = 2e-4   # complex64 state round-trip tolerance
+_SEMANTIC_SEED = 1234   # fixed: verification must be reproducible
+
+#: Invariant code -> description.  Codes are stable (docs/ANALYSIS.md holds
+#: the authoritative table; tests assert every code here is documented).
+INVARIANTS = {
+    "kind": "item kind must be one of dense | diag | perm",
+    "span-bounds": "qubits and controls lie in [0, n) with no overlap "
+                   "between the two",
+    "span-sorted": "diag/perm spans are strictly increasing (sorted, "
+                   "deduplicated) — cluster spans are sorted unions",
+    "width-dense": "dense item width <= plan.f (the fused-cluster budget) "
+                   "when fusion is on",
+    "width-special": "diag/perm item width <= the diagonal row budget "
+                     "(resolve_diag_f; LOCAL budget for sharded plans) — "
+                     "unbounded-merge exception: planar single-device "
+                     "diag coalescing may span up to n",
+    "perm-bijection": "perm is an int32 bijection of [0, 2**w)",
+    "perm-identity": "perm items never carry the identity map (the "
+                     "lowering refines those to diag / elides them)",
+    "perm-shape": "perm present exactly on perm items, sized 2**w",
+    "diag-shape": "diag items are control-free (controls fold into the "
+                  "phase vector) and carry at least one phase term",
+    "phase-unit": "const phase vectors have unit modulus per entry "
+                  "(complex64, length 2**w)",
+    "phase-param": "parameterized phase terms reference a diagonal "
+                   "PARAM_KINDS op (rz/phase) with a float32 2**w "
+                   "coefficient vector and a valid param index",
+    "factor-shape": "dense factors are (2**w, 2**w) complex constants or "
+                    "param ops from PARAM_KINDS with embed maps",
+    "class-counts": "plan.class_counts() agrees with an independent "
+                    "recount of the item list",
+    "flops": "plan.flops_per_amp() agrees with independent double-entry "
+             "recomputation from the item list",
+    "semantic": "the compiled program round-trips against the dense "
+                "gate-by-gate oracle on a fixed random binding",
+}
+
+
+class PlanVerificationError(AssertionError):
+    """A compiled plan violates a lowering invariant.
+
+    Carries the offending ``item_index`` (or None for plan-level checks),
+    the item ``kind``, and the violated ``invariant`` code from
+    :data:`INVARIANTS` — CI failures name the exact rule that broke.
+    """
+
+    def __init__(self, invariant: str, message: str,
+                 item_index: int | None = None, kind: str | None = None):
+        self.invariant = invariant
+        self.item_index = item_index
+        self.kind = kind
+        where = ("plan" if item_index is None
+                 else f"item[{item_index}] kind={kind!r}")
+        super().__init__(f"[{invariant}] {where}: {message}")
+
+
+def _fail(invariant: str, message: str, idx: int | None = None,
+          kind: str | None = None) -> None:
+    raise PlanVerificationError(invariant, message, item_index=idx, kind=kind)
+
+
+def _check_span(item: PlanItem, idx: int, n: int) -> None:
+    qs, cs = item.qubits, item.controls
+    for label, seq in (("qubit", qs), ("control", cs)):
+        for q in seq:
+            if not (0 <= q < n):
+                _fail("span-bounds", f"{label} {q} outside [0, {n})",
+                      idx, item.kind)
+    if len(set(qs)) != len(qs):
+        _fail("span-bounds", f"duplicate qubits in span {qs}", idx, item.kind)
+    if set(qs) & set(cs):
+        _fail("span-bounds", f"controls {cs} overlap targets {qs}",
+              idx, item.kind)
+    if item.kind in ("diag", "perm") and any(
+            a >= b for a, b in zip(qs, qs[1:])):
+        _fail("span-sorted", f"span {qs} not strictly increasing",
+              idx, item.kind)
+
+
+def _check_width(item: PlanItem, idx: int, plan: CompiledPlan,
+                 diag_budget: int) -> None:
+    w = len(item.qubits)
+    n = plan.n
+    if item.kind == "dense":
+        if plan.f and w > plan.f:
+            _fail("width-dense", f"width {w} > fused budget f={plan.f}",
+                  idx, item.kind)
+        return
+    # planar single-device plans coalesce adjacent diagonal runs without a
+    # cap (phase application is elementwise at any width); every other
+    # configuration — pallas blocks, sharded meshes — keeps the budget
+    if (item.kind == "diag" and plan.backend == "planar"
+            and plan.state_bits == 0):
+        cap = n
+    else:
+        cap = diag_budget
+    if w > cap:
+        _fail("width-special",
+              f"width {w} > diagonal row budget {cap} "
+              f"(state_bits={plan.state_bits})", idx, item.kind)
+
+
+def _check_phases(item: PlanItem, idx: int, num_params: int) -> None:
+    size = 1 << len(item.qubits)
+    for p in item.phases:
+        if p[0] == "const":
+            vec = np.asarray(p[1])
+            if vec.shape != (size,):
+                _fail("phase-unit",
+                      f"const phase shape {vec.shape} != ({size},)",
+                      idx, item.kind)
+            dev = np.abs(np.abs(vec) - 1.0).max()
+            if dev > _UNIT_ATOL:
+                _fail("phase-unit",
+                      f"const phase off unit circle by {dev:.2e} "
+                      f"(tol {_UNIT_ATOL})", idx, item.kind)
+        elif p[0] == "param":
+            _, op, coeff = p
+            if op.kind not in DIAG_PARAM_COEFF or op.kind not in PARAM_KINDS:
+                _fail("phase-param",
+                      f"non-diagonal param op kind {op.kind!r}",
+                      idx, item.kind)
+            coeff = np.asarray(coeff)
+            if coeff.shape != (size,) or coeff.dtype != np.float32:
+                _fail("phase-param",
+                      f"coefficient vector shape {coeff.shape} dtype "
+                      f"{coeff.dtype} != float32[{size}]", idx, item.kind)
+            if not (0 <= op.param < num_params):
+                _fail("phase-param",
+                      f"param index {op.param} outside [0, {num_params})",
+                      idx, item.kind)
+        else:
+            _fail("phase-param", f"unknown phase tag {p[0]!r}",
+                  idx, item.kind)
+
+
+def _check_perm(item: PlanItem, idx: int) -> None:
+    size = 1 << len(item.qubits)
+    if item.kind != "perm":
+        if item.perm is not None:
+            _fail("perm-shape", "non-perm item carries a perm array",
+                  idx, item.kind)
+        return
+    if item.perm is None:
+        _fail("perm-shape", "perm item without a perm array", idx, item.kind)
+    perm = np.asarray(item.perm)
+    if perm.dtype != np.int32 or perm.shape != (size,):
+        _fail("perm-shape",
+              f"perm dtype {perm.dtype} shape {perm.shape} != "
+              f"int32[{size}]", idx, item.kind)
+    if not np.array_equal(np.sort(perm), np.arange(size)):
+        _fail("perm-bijection",
+              f"perm is not a bijection of [0, {size})", idx, item.kind)
+    if np.array_equal(perm, np.arange(size)):
+        _fail("perm-identity",
+              "identity perm should have been refined to diag",
+              idx, item.kind)
+
+
+def _check_factors(item: PlanItem, idx: int, num_params: int) -> None:
+    size = 1 << len(item.qubits)
+    if item.kind != "dense":
+        if item.factors:
+            _fail("factor-shape", "special item carries dense factors",
+                  idx, item.kind)
+        if item.kind == "diag" and (item.controls or not item.phases):
+            _fail("diag-shape",
+                  f"controls={item.controls} phases={len(item.phases)} "
+                  "(diag items are control-free with >=1 phase term)",
+                  idx, item.kind)
+        return
+    if not item.factors:
+        _fail("factor-shape", "dense item without factors", idx, item.kind)
+    for f in item.factors:
+        if f[0] == "const":
+            mat = np.asarray(f[1])
+            if mat.shape != (size, size):
+                _fail("factor-shape",
+                      f"const factor shape {mat.shape} != ({size}, {size})",
+                      idx, item.kind)
+        elif f[0] == "param":
+            op = f[1]
+            if op.kind not in PARAM_KINDS:
+                _fail("factor-shape", f"unknown param op kind {op.kind!r}",
+                      idx, item.kind)
+            if not (0 <= op.param < num_params):
+                _fail("factor-shape",
+                      f"param index {op.param} outside [0, {num_params})",
+                      idx, item.kind)
+        else:
+            _fail("factor-shape", f"unknown factor tag {f[0]!r}",
+                  idx, item.kind)
+
+
+def _check_accounting(plan: CompiledPlan) -> None:
+    """Double-entry bookkeeping: recompute the per-class stats independently
+    and compare with what the plan reports."""
+    counts = {"diagonal": 0, "permutation": 0, "general": 0}
+    generic = actual = 0.0
+    for item in plan.items:
+        counts[{"diag": "diagonal", "perm": "permutation"}.get(
+            item.kind, "general")] += 1
+        dense = 8.0 * (1 << len(item.qubits)) / (1 << len(item.controls))
+        generic += (item.generic_flops
+                    if item.generic_flops is not None else dense)
+        if item.kind in ("diag", "perm"):
+            actual += 6.0 if item.phases else 0.0
+        else:
+            actual += dense
+    reported = plan.class_counts()
+    if reported != counts:
+        _fail("class-counts",
+              f"plan reports {reported}, item list recounts to {counts}")
+    rep = plan.flops_per_amp()
+    if (abs(rep["flops_per_amp_generic"] - generic) > 1e-6
+            or abs(rep["flops_per_amp_actual"] - actual) > 1e-6):
+        _fail("flops",
+              f"plan reports generic={rep['flops_per_amp_generic']} "
+              f"actual={rep['flops_per_amp_actual']}, item list recomputes "
+              f"generic={generic} actual={actual}")
+
+
+def _check_semantic(plan: CompiledPlan) -> None:
+    """Round-trip the compiled program against the dense oracle on one
+    fixed random binding (the single-device program path — sharded plans
+    share the same item list, so this validates their lowering too)."""
+    import jax.numpy as jnp
+    from repro.core import statevec as SV
+    rng = np.random.default_rng(_SEMANTIC_SEED)
+    params = rng.uniform(0.1, 1.3, plan.num_params).astype(np.float32)
+    got = np.asarray(plan.run(params).to_dense())
+    psi = jnp.zeros(1 << plan.n, jnp.complex64).at[0].set(1.0)
+    for g in plan.template.bind(params).gates:
+        psi = A.apply_gate_dense(psi, plan.n, g.qubits, g.matrix, g.controls)
+    want = np.asarray(psi)
+    err = float(np.abs(got - want).max())
+    if err > _SEMANTIC_ATOL:
+        _fail("semantic",
+              f"max |plan - dense oracle| = {err:.2e} > {_SEMANTIC_ATOL} "
+              f"on seed-{_SEMANTIC_SEED} binding")
+
+
+def verify_plan(plan: CompiledPlan, *, semantic: bool = False) -> CompiledPlan:
+    """Check every lowering invariant; raise PlanVerificationError on the
+    first violation, naming item index, kind, and invariant code.
+
+    Returns the plan unchanged on success so call sites can chain it:
+    ``plan = verify_plan(compile_plan(...))``.
+    """
+    n = plan.n
+    if plan.state_bits < 0 or plan.f < 0:
+        _fail("kind", f"negative f={plan.f} / state_bits={plan.state_bits}")
+    diag_budget = (resolve_diag_f(plan.f, plan.target, n,
+                                  state_bits=plan.state_bits)
+                   if plan.f else row_budget(n, plan.target))
+    for idx, item in enumerate(plan.items):
+        if item.kind not in ("dense", "diag", "perm"):
+            _fail("kind", f"unknown kind {item.kind!r}", idx, item.kind)
+        _check_span(item, idx, n)
+        _check_width(item, idx, plan, diag_budget)
+        _check_perm(item, idx)
+        _check_phases(item, idx, plan.num_params)
+        _check_factors(item, idx, plan.num_params)
+    _check_accounting(plan)
+    if semantic:
+        _check_semantic(plan)
+    return plan

@@ -48,6 +48,7 @@ class BatchExecutor:
     cache: PlanCache | None = None
     mesh: object | None = None       # device count | jax Mesh | None
     max_local_qubits: int | None = None  # per-device row budget (spill knob)
+    verify: bool = False             # run the plan-IR verifier on each compile
 
     def __post_init__(self):
         if self.cache is None:
@@ -62,7 +63,7 @@ class BatchExecutor:
         # remaining shared mutable — the mesh dict.  dispatch_batch itself
         # stays lock-free so launches overlap device execution.
         self._mesh_lock = threading.Lock()
-        self._meshes: dict = {}
+        self._meshes: dict = {}      #: guarded-by: _mesh_lock
         self._device_pool: list | None = None
         if self.mesh is None:
             return
@@ -103,7 +104,8 @@ class BatchExecutor:
         return self.cache.get_or_compile(
             template, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
-            specialize=self.specialize, state_bits=spec.state_bits)
+            specialize=self.specialize, state_bits=spec.state_bits,
+            verify=self.verify)
 
     def plan_key(self, template: CircuitTemplate | Circuit) -> tuple:
         """The cache key :meth:`plan_for` resolves ``template`` to — the

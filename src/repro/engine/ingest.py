@@ -207,7 +207,7 @@ class IngestServer:
         self.max_pending = max_pending
         self._slots = threading.BoundedSemaphore(max_pending)
         self._seq = itertools.count()
-        self._lanes: dict[int, _Lane] = {}            # thread ident -> lane
+        self._lanes: dict[int, _Lane] = {}            # thread ident -> lane  #: guarded-by: _mutex, _wake
         self._local = threading.local()
         # _mutex orders intake state (lanes map, seq, closed flag) and backs
         # the drain loop's condition sleep; _done tracks outstanding counts
@@ -219,12 +219,12 @@ class IngestServer:
         # concurrent close()/flush() pair) so teardown paths can never
         # double-deliver a handle or double-release its pending slot
         self._sweep = threading.RLock()
-        self._outstanding = 0
-        self._live: dict[int, IngestHandle] = {}      # drain-loop private
-        self._closed = False
-        self._force = False            # one-shot: dispatch underfull groups
+        self._outstanding = 0                         #: guarded-by: _done
+        self._live: dict[int, IngestHandle] = {}      # drain-loop private  #: guarded-by: _sweep
+        self._closed = False           #: guarded-by: _mutex, _wake
+        self._force = False            # one-shot: dispatch underfull groups  #: guarded-by: _mutex, _wake
         self._loop_error: BaseException | None = None
-        self._rejected = 0
+        self._rejected = 0             #: guarded-by: _mutex, _wake
         self._thread: threading.Thread | None = None
         if autostart:
             self.start()
@@ -315,6 +315,10 @@ class IngestServer:
                timeout: float | None = None) -> IngestHandle:
         """Enqueue one request from any thread; returns immediately with a
         future-like handle (modulo backpressure under the block policy)."""
+        # lint-ok: EL001 unlocked fast-path check only; the authoritative
+        # closed-vs-accepted decision is re-made under _mutex below, after
+        # backpressure — this read just fails producers early without
+        # contending the intake mutex
         if self._closed:
             raise IngestClosed("ingest server is closed")
         # shared with BatchScheduler.submit, so shape errors surface in the
@@ -404,7 +408,9 @@ class IngestServer:
         return got
 
     def _deliver(self) -> int:
-        """Resolve futures of terminal requests; frees backpressure slots."""
+        """Resolve futures of terminal requests; frees backpressure slots.
+        Caller holds ``_sweep`` (the loop's ``_step_once``, ``_final_sweep``,
+        or the ``_abort`` teardown)."""
         resolved = [(seq, h) for seq, h in self._live.items()
                     if h.request is not None and h.request.done]
         for seq, h in resolved:
@@ -491,6 +497,7 @@ class IngestServer:
             self._abort_locked(error)
 
     def _abort_locked(self, error: BaseException) -> None:
+        """Caller holds ``_sweep``."""
         try:
             self._deliver()              # terminal requests resolve normally
         except Exception:  # noqa: BLE001 — best effort during teardown
@@ -519,12 +526,18 @@ class IngestServer:
             self._step_once(force=force)
             if self._have_lane_items():
                 continue                     # a burst landed mid-step
-            if self._closed:
+            with self._mutex:
+                closed = self._closed
+            if closed:
                 break
             # nothing to ingest: retire the oldest in-flight batch (blocking
             # converts idle time into result delivery), else sleep on the
             # condition until a submit arrives or the age-out tick elapses —
             # never a busy spin
+            # lint-ok: EL001 _live is mutated only by this loop thread while
+            # it runs (_step_once/_final_sweep drivers are serialized on
+            # _sweep); this unlocked emptiness read only tunes the
+            # retire-vs-sleep choice
             if not self._live or not self.scheduler.retire_one():
                 with self._wake:
                     # the predicate must cover every wake reason (close,
@@ -538,6 +551,8 @@ class IngestServer:
                         # the scheduler has no aging trigger at all, so only
                         # a submit/drain/close can create progress — sleep
                         # untimed: zero wakeups, zero lock contention
+                        # lint-ok: EL001 same loop-thread-private _live read
+                        # as above — only picks timed vs untimed sleep
                         idle = not self._live and not self.scheduler.pending
                         timed = not idle and self.max_wait_ms is not None
                         self._wake.wait(tick if timed else None)

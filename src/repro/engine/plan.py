@@ -769,12 +769,14 @@ class CompiledPlan:
     # once by compile_plan via repro.engine.telemetry.vectorization_profile
     profile: "object | None" = dataclasses.field(
         default=None, repr=False, compare=False)
-    batch_compiles: int = 0
-    batch_evictions: int = 0
+    batch_compiles: int = 0          #: guarded-by: _plock
+    batch_evictions: int = 0         #: guarded-by: _plock
     sharded_swaps: int | None = None  # all_to_alls traced by the last sharded build
     cache_stats: "CacheStats | None" = dataclasses.field(
         default=None, repr=False)
+    #: guarded-by: _plock
     _single: Callable | None = dataclasses.field(default=None, repr=False)
+    #: guarded-by: _plock
     _batched: collections.OrderedDict = dataclasses.field(
         default_factory=collections.OrderedDict, repr=False)
     # guards the per-plan executable caches (_single/_batched) and their
@@ -947,6 +949,9 @@ class CompiledPlan:
         data0 = self._initial_data(initial)
         if initial is not None and self.backend != "dense":
             data0 = jnp.array(data0)   # don't donate the caller's buffer
+        # lint-ok: EL001 _single is write-once under _plock above; this read
+        # happens after the build and the reference is never cleared, so the
+        # unlocked dispatch sees either this thread's or a prior build
         out = self._single(data0, self._params_array(params))
         return self._wrap(out)
 
@@ -1228,7 +1233,9 @@ def resolve_diag_f(f_eff: int, target: Target, n: int,
 def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None = None, fuse: bool = True,
                  interpret: bool = True, specialize: bool = True,
-                 state_bits: int = 0) -> CompiledPlan:
+                 state_bits: int = 0, verify: bool = False,
+                 clock: Callable[[], float] = time.perf_counter,
+                 ) -> CompiledPlan:
     """Cluster once, lower once: build the fused program for one structure.
 
     ``specialize`` enables gate-class-aware lowering: diagonal and
@@ -1241,8 +1248,15 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
     ``2**state_bits`` devices (:meth:`CompiledPlan.run_sharded_batch_raw`):
     item widths are capped by the *local* sub-state's row budget, which is
     why plans for different mesh shapes are distinct cache entries.
+
+    ``verify=True`` runs the structural plan-IR verifier
+    (:func:`repro.analysis.verify_plan.verify_plan`) on the result before
+    returning it — the debug/CI mode the benchmark smoke configs use.
+    ``clock`` injects the timebase for ``compile_seconds`` attribution
+    (tests pass a fake; the default is a *reference*, never called at
+    import time).
     """
-    t0 = time.perf_counter()
+    t0 = clock()
     dummy = template.bind(np.zeros(template.num_params))
     ops = template.ops
     f_eff = resolve_f(f, target, template.n, fuse, backend,
@@ -1272,7 +1286,12 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
     # static vectorization profile, computed once here (inside the timed
     # region: it is part of the compile, and compile_seconds attributes it)
     plan.profile = vectorization_profile(plan, dummy.gates, target)
-    plan.compile_seconds = time.perf_counter() - t0
+    plan.compile_seconds = clock() - t0
+    if verify:
+        # imported here: repro.analysis sits above the engine in the layer
+        # order (it imports this module)
+        from repro.analysis.verify_plan import verify_plan
+        verify_plan(plan)
     return plan
 
 
@@ -1286,11 +1305,13 @@ class CacheStats:
     under the same lock.
     """
 
-    hits: int = 0
-    misses: int = 0
-    compiles: int = 0
-    evictions: int = 0
+    hits: int = 0                #: guarded-by: _lock
+    misses: int = 0              #: guarded-by: _lock
+    compiles: int = 0            #: guarded-by: _lock
+    evictions: int = 0           #: guarded-by: _lock
+    #: guarded-by: _lock
     batch_evictions: int = 0     # per-plan batched-executable LRU evictions
+    #: guarded-by: _lock
     compile_seconds: float = 0.0  # total wall time spent in compile_plan
 
     def __post_init__(self):
@@ -1340,7 +1361,7 @@ class PlanCache:
 
     def __init__(self, max_plans: int = 256):
         self.max_plans = max_plans
-        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._plans: collections.OrderedDict = collections.OrderedDict()  #: guarded-by: _lock
         self._lock = threading.RLock()
         self.stats = CacheStats()
 
@@ -1370,7 +1391,10 @@ class PlanCache:
                        backend: str, target: Target, f: int | None = None,
                        fuse: bool = True, interpret: bool = True,
                        specialize: bool = True,
-                       state_bits: int = 0) -> CompiledPlan:
+                       state_bits: int = 0,
+                       verify: bool = False) -> CompiledPlan:
+        """``verify=True`` runs the plan-IR verifier on cache *misses* (a
+        hit was verified when it was compiled)."""
         if isinstance(template, Circuit):
             from repro.engine.template import template_of
             template = template_of(template)
@@ -1386,7 +1410,8 @@ class PlanCache:
             self.stats.bump("misses")
             plan = compile_plan(template, backend=backend, target=target,
                                 f=f, fuse=fuse, interpret=interpret,
-                                specialize=specialize, state_bits=state_bits)
+                                specialize=specialize, state_bits=state_bits,
+                                verify=verify)
             plan.cache_stats = self.stats
             self.stats.bump("compiles")
             self.stats.record_compile(plan.compile_seconds)

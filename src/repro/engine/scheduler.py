@@ -196,10 +196,11 @@ class SchedulerStats:
     ``len(stats.latencies)`` is still the total recorded count.
     """
 
-    requests: int = 0
-    batches: int = 0
-    padded_slots: int = 0
-    failed: int = 0
+    requests: int = 0       #: guarded-by: _lock
+    batches: int = 0        #: guarded-by: _lock
+    padded_slots: int = 0   #: guarded-by: _lock
+    failed: int = 0         #: guarded-by: _lock
+    # (not guarded-by _lock: the Histogram carries its own internal lock)
     latencies: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(LATENCY_WINDOW, name="latency"))
 
@@ -255,13 +256,16 @@ class InFlightBatch:
         self.stats = stats
         self.clock = clock
         self.tracer = tracer
-        self.finalized = False
+        self.finalized = False           #: guarded-by: _flock
         self._flock = threading.Lock()   # finalize is idempotent *and* racy-
                                          # safe: wait() callers vs drain loop
 
     @property
     def ready(self) -> bool:
         """True when device results can be retired without blocking."""
+        # lint-ok: EL001 racy-read by design: finalized only ever flips
+        # False->True, so a stale read merely reports not-ready one poll
+        # early; taking _flock here would serialize polls behind finalize
         if self.finalized:
             return True
         try:
@@ -360,10 +364,10 @@ class BatchScheduler:
         # signalled on every submit so drain loops can sleep between bursts
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
-        self._window: collections.deque[InFlightBatch] = collections.deque()
+        self._window: collections.deque[InFlightBatch] = collections.deque()  #: guarded-by: _lock, _work
         # the queue, grouped by plan key, maintained incrementally so the
         # streaming trigger check in submit() stays O(group count)
-        self._groups: dict[tuple, list[Request]] = {}
+        self._groups: dict[tuple, list[Request]] = {}  #: guarded-by: _lock, _work
 
     @property
     def clock(self) -> Callable[[], float]:
@@ -566,8 +570,11 @@ class BatchScheduler:
         must never busy-spin while requests are merely in flight); ``None``
         returns immediately.
         """
-        if wait_ms is not None and not self._groups:
-            self.wait_for_work(wait_ms / 1e3)
+        if wait_ms is not None:
+            with self._lock:
+                empty = not self._groups
+            if empty:
+                self.wait_for_work(wait_ms / 1e3)
         return self._dispatch_groups(self._take_groups())
 
     def sync(self) -> None:

@@ -67,7 +67,7 @@ class Counter:
 
     def __init__(self, name: str):
         self.name = name
-        self._value = 0
+        self._value = 0                     #: guarded-by: _lock
         self._lock = threading.Lock()
 
     def inc(self, k: int = 1) -> None:
@@ -90,7 +90,7 @@ class Gauge:
 
     def __init__(self, name: str):
         self.name = name
-        self._value = 0.0
+        self._value = 0.0                   #: guarded-by: _lock
         self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
@@ -125,11 +125,11 @@ class Histogram:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.name = name
         self.capacity = capacity
-        self._ring = np.empty(capacity, np.float64)
-        self._count = 0
-        self._sum = 0.0
-        self._min = np.inf
-        self._max = -np.inf
+        self._ring = np.empty(capacity, np.float64)  #: guarded-by: _lock
+        self._count = 0                              #: guarded-by: _lock
+        self._sum = 0.0                              #: guarded-by: _lock
+        self._min = np.inf                           #: guarded-by: _lock
+        self._max = -np.inf                          #: guarded-by: _lock
         self._lock = threading.Lock()
 
     def record(self, v: float) -> None:
@@ -197,8 +197,8 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._instruments: dict[str, object] = {}
-        self._sources: list[tuple[str, Callable[[], dict]]] = []
+        self._instruments: dict[str, object] = {}  #: guarded-by: _lock
+        self._sources: list[tuple[str, Callable[[], dict]]] = []  #: guarded-by: _lock
 
     def _get(self, name: str, cls, factory):
         with self._lock:
@@ -347,7 +347,7 @@ class SpanTracer:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._events: dict[int, list] = {}
+        self._events: dict[int, list] = {}  #: guarded-by: _lock
 
     # -- recording (hot path) -------------------------------------------------
     def record(self, req_id: int, stage: str, ts: float, **attrs) -> None:
@@ -552,7 +552,7 @@ class ServedActivity:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._per_key: dict[str, dict] = {}
+        self._per_key: dict[str, dict] = {}  #: guarded-by: _lock
 
     @staticmethod
     def plan_label(plan) -> str:

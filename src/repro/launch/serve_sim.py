@@ -203,6 +203,9 @@ def main(argv=None):
                     help="export the unified metrics-registry snapshot "
                          "(scheduler/cache/compile/served/ingest) as JSON")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="run the plan-IR verifier on every compiled plan "
+                         "(repro.analysis; CI smoke mode)")
     ap.add_argument("--compare-sync", action="store_true",
                     help="also run the same traffic through a fresh "
                          "synchronous scheduler (warm plans) and report the "
@@ -213,7 +216,8 @@ def main(argv=None):
                              backend=args.backend, f=args.f,
                              specialize=args.specialize == "on",
                              mesh=args.mesh,
-                             max_local_qubits=args.max_local_qubits)
+                             max_local_qubits=args.max_local_qubits,
+                             verify=args.verify_plans)
     # ingest mode streams by default (2ms age-out) — without a trigger the
     # drain loop would hold every underfull group until the final drain()
     max_wait_ms = args.max_wait_ms
