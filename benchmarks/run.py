@@ -11,10 +11,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (batch_throughput, concurrent_ingest, fig6_overall,
-                        fig10_fusion, fig11_ai, fig12_ablation, fig13_scaling,
-                        fig14_projection, gate_classes, roofline,
-                        serve_mixed, sharded_batch, tab3_gate_ops,
+from benchmarks import (batch_throughput, chaos_serve, concurrent_ingest,
+                        fig6_overall, fig10_fusion, fig11_ai, fig12_ablation,
+                        fig13_scaling, fig14_projection, gate_classes,
+                        roofline, serve_mixed, sharded_batch, tab3_gate_ops,
                         tab4_vectorization, telemetry_overhead)
 
 MODULES = {
@@ -30,6 +30,7 @@ MODULES = {
     "batch": batch_throughput,
     "serve": serve_mixed,
     "ingest": concurrent_ingest,
+    "chaos": chaos_serve,
     "classes": gate_classes,
     "sharded": sharded_batch,
     "telemetry": telemetry_overhead,

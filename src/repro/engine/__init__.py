@@ -25,3 +25,7 @@ from repro.engine.scheduler import (  # noqa: F401
 from repro.engine.ingest import (  # noqa: F401
     IngestClosed, IngestHandle, IngestRejected, IngestServer,
 )
+from repro.engine.resilience import (  # noqa: F401
+    DeadlineExceeded, FaultInjector, InjectedFault, PlanBreaker, RequestRecord,
+    RetryPolicy, ServingCheckpoint, replay_records, snapshot_records,
+)

@@ -31,6 +31,7 @@ from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.target import CPU_TEST, Target
 from repro.engine.plan import CacheStats, CompiledPlan, PlanCache
+from repro.engine.resilience import SITE_DISPATCH, SITE_FINALIZE
 from repro.engine.telemetry import ServedActivity
 from repro.engine.template import CircuitTemplate, template_of
 
@@ -49,6 +50,8 @@ class BatchExecutor:
     mesh: object | None = None       # device count | jax Mesh | None
     max_local_qubits: int | None = None  # per-device row budget (spill knob)
     verify: bool = False             # run the plan-IR verifier on each compile
+    injector: object | None = None   # resilience.FaultInjector (chaos testing)
+    breaker: object | None = None    # resilience.PlanBreaker (quarantine)
 
     def __post_init__(self):
         if self.cache is None:
@@ -101,11 +104,23 @@ class BatchExecutor:
         if isinstance(template, Circuit):
             template = template_of(template)
         spec = self.shard_spec_for(template.n, 1)
+        specialize = self.specialize
+        if self.breaker is not None and specialize:
+            # quarantined plan keys fall back to the generic lowering — a
+            # distinct cache entry, so a poisoned specialized compile is
+            # never re-attempted while its breaker is open
+            key = self.cache.plan_key(
+                template, backend=self.backend, target=self.target, f=self.f,
+                fuse=self.fuse, interpret=self.interpret,
+                specialize=True, state_bits=spec.state_bits)
+            if self.breaker.is_open(key):
+                specialize = False
+                self.breaker.record_fallback()
         return self.cache.get_or_compile(
             template, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
-            specialize=self.specialize, state_bits=spec.state_bits,
-            verify=self.verify)
+            specialize=specialize, state_bits=spec.state_bits,
+            verify=self.verify, injector=self.injector)
 
     def plan_key(self, template: CircuitTemplate | Circuit) -> tuple:
         """The cache key :meth:`plan_for` resolves ``template`` to — the
@@ -165,6 +180,10 @@ class BatchExecutor:
         if isinstance(template, Circuit):
             template = template_of(template)
         plan = self.plan_for(template)
+        if self.injector is not None:
+            # fires *before* the activity accounting: a faulted dispatch
+            # never counts as served rows
+            self.injector.fire(SITE_DISPATCH)
         # rows include any scheduler padding: this counts what the device is
         # asked to run.  Recorded *before* the launch so the accounting never
         # sits between enqueue and the caller's first readiness check
@@ -186,6 +205,8 @@ class BatchExecutor:
         """Blocking retire step for :meth:`dispatch_batch`: wait for device
         results and wrap the first ``count`` rows (all, by default) into
         :class:`~repro.core.statevec.State` objects."""
+        if self.injector is not None:
+            self.injector.fire(SITE_FINALIZE)
         jax.block_until_ready(raw)
         return plan.wrap_batch(raw, count=count)
 

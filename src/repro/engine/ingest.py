@@ -81,7 +81,7 @@ class IngestHandle:
     """
 
     __slots__ = ("seq", "template", "params", "request", "enqueue_ts",
-                 "_future")
+                 "deadline_at", "_future")
 
     def __init__(self, seq: int, template: CircuitTemplate,
                  params: np.ndarray):
@@ -90,6 +90,7 @@ class IngestHandle:
         self.params = params
         self.request: Request | None = None   # set by the drain loop
         self.enqueue_ts: float | None = None  # lane-append stamp (traced runs)
+        self.deadline_at: float | None = None  # absolute deadline (clock units)
         self._future: concurrent.futures.Future = concurrent.futures.Future()
 
     def done(self) -> bool:
@@ -312,9 +313,18 @@ class IngestServer:
 
     def submit(self, template: CircuitTemplate | Circuit,
                params: Sequence[float] | None = None, *,
-               timeout: float | None = None) -> IngestHandle:
+               timeout: float | None = None,
+               deadline_ms: float | None = None) -> IngestHandle:
         """Enqueue one request from any thread; returns immediately with a
-        future-like handle (modulo backpressure under the block policy)."""
+        future-like handle (modulo backpressure under the block policy).
+
+        ``deadline_ms`` arms a serving deadline counted from *this* call
+        (producer-side, so lane wait burns budget too): a request still
+        undispatched when it elapses is shed with a terminal
+        :class:`~repro.engine.resilience.DeadlineExceeded` instead of
+        wasting a dispatch."""
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         # lint-ok: EL001 unlocked fast-path check only; the authoritative
         # closed-vs-accepted decision is re-made under _mutex below, after
         # backpressure — this read just fails producers early without
@@ -335,6 +345,8 @@ class IngestServer:
             raise IngestRejected(f"pending window full ({self.max_pending}); "
                                  f"policy={self.policy!r}")
         handle = IngestHandle(next(self._seq), template, p)
+        if deadline_ms is not None:
+            handle.deadline_at = self.scheduler.clock() + deadline_ms / 1e3
         if self.tracer.enabled:
             # producer-side stamp off the scheduler clock; recorded against
             # the req_id once the drain loop merges this ticket
@@ -445,7 +457,8 @@ class IngestServer:
             for h in collected:
                 self._live[h.seq] = h
             for h in collected:
-                h.request = self.scheduler.submit(h.template, h.params)
+                h.request = self.scheduler.submit(h.template, h.params,
+                                                  deadline_at=h.deadline_at)
                 if self.tracer.enabled and h.enqueue_ts is not None:
                     self.tracer.record(h.request.req_id, STAGE_ENQUEUE,
                                        h.enqueue_ts, seq=h.seq)
@@ -554,10 +567,30 @@ class IngestServer:
                         # lint-ok: EL001 same loop-thread-private _live read
                         # as above — only picks timed vs untimed sleep
                         idle = not self._live and not self.scheduler.pending
-                        timed = not idle and self.max_wait_ms is not None
+                        # a retry backlog also ages toward dispatch (its
+                        # backoff elapses with no submit to wake us), so it
+                        # forces a timed sleep even in no-aging mode
+                        timed = not idle and (
+                            self.max_wait_ms is not None
+                            or self.scheduler.backoff_pending)
                         self._wake.wait(tick if timed else None)
         # shutdown: flush lanes, queued groups, and the in-flight window
         self._final_sweep()
+
+    # -- checkpointing --------------------------------------------------------
+    def pending_handles(self) -> list[IngestHandle]:
+        """Every submission not yet terminal, ticket-ordered — the in-flight
+        state a :func:`~repro.engine.resilience.snapshot_records` checkpoint
+        captures: ingested-but-unresolved handles plus anything still
+        sitting in a producer lane (not yet seen by the drain loop)."""
+        with self._sweep:
+            live = [h for h in self._live.values()
+                    if h.request is None or not h.request.done]
+            with self._mutex:
+                lanes = list(self._lanes.values())
+            for lane in lanes:
+                live.extend(list(lane.buf))
+        return sorted(live, key=lambda h: h.seq)
 
     # -- reporting ------------------------------------------------------------
     def ingest_counters(self) -> dict:

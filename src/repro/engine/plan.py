@@ -1392,9 +1392,12 @@ class PlanCache:
                        fuse: bool = True, interpret: bool = True,
                        specialize: bool = True,
                        state_bits: int = 0,
-                       verify: bool = False) -> CompiledPlan:
+                       verify: bool = False,
+                       injector=None) -> CompiledPlan:
         """``verify=True`` runs the plan-IR verifier on cache *misses* (a
-        hit was verified when it was compiled)."""
+        hit was verified when it was compiled).  ``injector`` is a
+        resilience :class:`~repro.engine.resilience.FaultInjector` whose
+        compile site fires on misses only — a cached plan never faults."""
         if isinstance(template, Circuit):
             from repro.engine.template import template_of
             template = template_of(template)
@@ -1408,6 +1411,9 @@ class PlanCache:
                 self._plans.move_to_end(key)
                 return plan
             self.stats.bump("misses")
+            if injector is not None:
+                from repro.engine.resilience import SITE_COMPILE
+                injector.fire(SITE_COMPILE)
             plan = compile_plan(template, backend=backend, target=target,
                                 f=f, fuse=fuse, interpret=interpret,
                                 specialize=specialize, state_bits=state_bits,

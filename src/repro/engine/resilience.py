@@ -1,0 +1,452 @@
+"""Fault-tolerant serving: injection, retry, deadlines, breaker, checkpoint.
+
+The paper's target workloads are long-running, large-``n`` sweeps where a
+single fault wastes hours of device time; the NUMA-scale simulation studies
+likewise find that past a few sockets the *runtime* layer — contention,
+placement, recovery — dominates over kernels.  This module is that layer for
+the serving engine: it makes batch failure a recoverable event instead of a
+terminal one, and it makes the recovery paths testable by construction.
+
+Five pieces, threaded through scheduler / executor / ingest / telemetry:
+
+* :class:`FaultInjector` — a *deterministic, seed-scheduled* chaos source.
+  Injection sites (``dispatch``, ``finalize``, ``compile``, ``straggler``)
+  sit behind hooks in :meth:`BatchExecutor.dispatch_batch` /
+  ``finalize_batch`` / :meth:`PlanCache.get_or_compile` and the in-flight
+  readiness poll.  One seeded generator drawn under a lock makes a chaos
+  run a pure function of ``(seed, rates, traffic)`` — replayable, so a
+  failing chaos test reproduces from its logged seed.
+* :class:`RetryPolicy` — bounded retries with exponential backoff and
+  *deterministic* jitter (hashed from the request id, no hidden RNG).
+  The scheduler re-enqueues exactly the failed batch's requests as one
+  retry chunk, preserving the chunk's padded batch size so retried
+  results stay bitwise-equal to a fault-free run (see
+  docs/RESILIENCE.md).  Only transient errors retry by default.
+* :class:`DeadlineExceeded` + shedding — requests carry an optional
+  deadline; the scheduler sheds past-deadline requests with the distinct
+  terminal state ``SHED`` *before* wasting a dispatch.
+* :class:`PlanBreaker` — a plan-key circuit breaker: a key that fails
+  ``threshold`` consecutive times is quarantined, and the executor serves
+  it through the generic ``specialize=False`` lowering instead of
+  poisoning the cache with repeated failing compiles.
+* :class:`ServingCheckpoint` — checkpointed in-flight state over
+  :class:`repro.checkpoint.CheckpointManager`'s atomic-commit /
+  sha256-verified format: :func:`snapshot_records` captures every
+  outstanding request (scheduler queue + retry queue + in-flight window,
+  or an ingest server's lanes + live handles), and
+  :func:`replay_records` resubmits them in id order after a crash — the
+  kill-and-restore path the crash-restart suite pins bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pickle
+import threading
+import zlib
+
+import numpy as np
+
+from repro.checkpoint.checkpointing import CheckpointManager
+
+__all__ = [
+    "InjectedFault", "DeadlineExceeded", "FaultInjector", "RetryPolicy",
+    "PlanBreaker", "RequestRecord", "ServingCheckpoint",
+    "snapshot_records", "replay_records",
+    "SITE_DISPATCH", "SITE_FINALIZE", "SITE_COMPILE", "SITE_STRAGGLER",
+]
+
+# injection sites (the executor/scheduler hooks that consult the injector)
+SITE_DISPATCH = "dispatch"      # BatchExecutor.dispatch_batch launch
+SITE_FINALIZE = "finalize"      # device retire (transient device loss)
+SITE_COMPILE = "compile"        # PlanCache.get_or_compile cold compile
+SITE_STRAGGLER = "straggler"    # in-flight readiness poll (hang/straggler)
+SITES = (SITE_DISPATCH, SITE_FINALIZE, SITE_COMPILE, SITE_STRAGGLER)
+
+
+class InjectedFault(RuntimeError):
+    """A chaos fault raised by :class:`FaultInjector.fire`.
+
+    ``transient`` marks it retryable to :class:`RetryPolicy` — injected
+    faults model device loss / preemption, not bad requests.
+    """
+
+    transient = True
+
+    def __init__(self, site: str, ordinal: int):
+        super().__init__(f"injected {site} fault #{ordinal}")
+        self.site = site
+        self.ordinal = ordinal
+
+
+class DeadlineExceeded(RuntimeError):
+    """Terminal error of a request shed for missing its deadline."""
+
+
+class FaultInjector:
+    """Deterministic seed-scheduled fault source for chaos runs.
+
+    ``rates`` maps injection sites to fault probabilities; sites absent
+    (or at rate 0) never fire *and never consume randomness*, so adding a
+    site to a schedule does not perturb the draws of the others' shared
+    stream order.  ``max_faults`` bounds the total faults fired (so a
+    rate-1.0 schedule can model "fail the first k attempts, then heal").
+
+    Determinism: one seeded generator, drawn under a lock, in call order.
+    Under the engine's single-dispatcher drain loop the call order is a
+    pure function of the traffic, so a chaos run replays exactly from
+    ``(seed, rates, traffic)`` — the property the chaos suite pins.
+    """
+
+    def __init__(self, seed: int = 0, rates: dict[str, float] | None = None,
+                 max_faults: int | None = None,
+                 straggler_polls: int = 3):
+        rates = dict(rates or {})
+        for site, rate in rates.items():
+            if site not in SITES:
+                raise ValueError(f"unknown injection site {site!r} "
+                                 f"(known: {', '.join(SITES)})")
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"rate for {site!r} must be in [0, 1], "
+                                 f"got {rate}")
+        self.seed = seed
+        self.rates = rates
+        self.max_faults = max_faults
+        self.straggler_polls = straggler_polls
+        self._lock = threading.Lock()
+        self._rng = np.random.default_rng(seed)  #: guarded-by: _lock
+        self._checks: dict[str, int] = {s: 0 for s in SITES}  #: guarded-by: _lock
+        self._fired: dict[str, int] = {s: 0 for s in SITES}   #: guarded-by: _lock
+        self._total = 0                                       #: guarded-by: _lock
+
+    def _roll(self, site: str) -> bool:
+        """Caller holds ``_lock``."""
+        rate = self.rates.get(site, 0.0)
+        self._checks[site] += 1
+        if rate <= 0.0:
+            return False
+        if self.max_faults is not None and self._total >= self.max_faults:
+            return False
+        if float(self._rng.random()) >= rate:
+            return False
+        self._fired[site] += 1
+        self._total += 1
+        return True
+
+    def fire(self, site: str) -> None:
+        """Raise :class:`InjectedFault` when the schedule says this check
+        faults; otherwise a no-op.  Called from the injection hooks."""
+        with self._lock:
+            if not self._roll(site):
+                return
+            ordinal = self._total
+        raise InjectedFault(site, ordinal)
+
+    def draw_straggler(self) -> int:
+        """Extra not-ready polls for a just-launched batch (0 = no hang).
+
+        Models a straggler/hang at the retire site: the in-flight batch
+        reports not-ready for this many readiness polls even though the
+        device results already landed, delaying opportunistic retirement
+        without any wall-clock sleep.
+        """
+        with self._lock:
+            return self.straggler_polls if self._roll(SITE_STRAGGLER) else 0
+
+    def counters(self) -> dict:
+        """Exact per-site check/fired counts (telemetry registry source)."""
+        with self._lock:
+            out = {f"{s}_checks": self._checks[s] for s in SITES}
+            out.update({f"{s}_fired": self._fired[s] for s in SITES})
+            out["total_fired"] = self._total
+        return out
+
+
+_TRANSIENT_TYPES = (InjectedFault, TimeoutError, ConnectionError, OSError)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff and deterministic jitter.
+
+    ``max_retries`` is the per-request budget: a request may be dispatched
+    at most ``1 + max_retries`` times before a transient failure becomes
+    terminal FAILED.  Backoff for attempt *k* (1-based) is
+    ``backoff_base_ms * backoff_factor**(k-1)`` capped at
+    ``backoff_max_ms``, plus-or-minus ``jitter_frac`` of itself — the
+    jitter is hashed from ``(token, attempt)``, not drawn from an RNG, so
+    two runs of the same traffic back off identically.
+
+    Only *transient* errors retry: anything carrying a truthy
+    ``transient`` attribute (:class:`InjectedFault`) or an instance of
+    ``TimeoutError`` / ``ConnectionError`` / ``OSError`` — a genuinely bad
+    request (shape error, non-unitary gate) fails fast on its first
+    attempt.  ``retry_all=True`` widens that to every exception.
+    """
+
+    max_retries: int = 3
+    backoff_base_ms: float = 1.0
+    backoff_factor: float = 2.0
+    backoff_max_ms: float = 50.0
+    jitter_frac: float = 0.25
+    retry_all: bool = False
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+
+    def transient(self, error: BaseException) -> bool:
+        return bool(getattr(error, "transient", False)) or isinstance(
+            error, _TRANSIENT_TYPES)
+
+    def should_retry(self, error: BaseException, attempt: int) -> bool:
+        """True when dispatch attempt ``attempt`` (1-based count of
+        *retries*, i.e. the attempt about to be made) is within budget and
+        the error class is retryable."""
+        if attempt > self.max_retries:
+            return False
+        return self.retry_all or self.transient(error)
+
+    def backoff_s(self, attempt: int, token: int = 0) -> float:
+        """Deterministic backoff (seconds) before retry ``attempt``."""
+        base = self.backoff_base_ms * self.backoff_factor ** max(
+            attempt - 1, 0)
+        base = min(base, self.backoff_max_ms)
+        # crc32-hashed jitter in [-jitter_frac, +jitter_frac) of the base:
+        # deterministic per (token, attempt), uniform enough to de-sync
+        # retry chunks without any RNG state to seed or log
+        frac = (zlib.crc32(f"{token}:{attempt}".encode()) % 4096) / 4096.0
+        return (base * (1.0 + self.jitter_frac * (2.0 * frac - 1.0))) / 1e3
+
+
+class PlanBreaker:
+    """Per-plan-key circuit breaker quarantining repeat offenders.
+
+    Counts *consecutive* batch failures per plan key.  When a key reaches
+    ``threshold`` its circuit opens: the executor stops resolving the
+    specialized lowering for that key and serves it through the generic
+    ``specialize=False`` fallback plan instead (a distinct cache entry —
+    the quarantined plan stays cached but unused).  A success on a key
+    that has not yet tripped resets its count; an open key stays open
+    until :meth:`reset` — graceful degradation, not flapping.
+    """
+
+    def __init__(self, threshold: int = 3):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = threshold
+        self._lock = threading.Lock()
+        self._failures: dict[tuple, int] = {}  #: guarded-by: _lock
+        self._open: set[tuple] = set()         #: guarded-by: _lock
+        self._trips = 0                        #: guarded-by: _lock
+        self._fallback_batches = 0             #: guarded-by: _lock
+
+    def record_failure(self, key: tuple) -> bool:
+        """Count one batch failure; True when this failure trips the key."""
+        with self._lock:
+            if key in self._open:
+                return False
+            n = self._failures.get(key, 0) + 1
+            self._failures[key] = n
+            if n < self.threshold:
+                return False
+            self._open.add(key)
+            self._trips += 1
+            return True
+
+    def record_success(self, key: tuple) -> None:
+        with self._lock:
+            if key not in self._open:
+                self._failures.pop(key, None)
+
+    def record_fallback(self) -> None:
+        """One batch served through the generic fallback lowering."""
+        with self._lock:
+            self._fallback_batches += 1
+
+    def is_open(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._open
+
+    def open_keys(self) -> list[tuple]:
+        with self._lock:
+            return sorted(self._open)
+
+    def reset(self, key: tuple | None = None) -> None:
+        """Close one key's circuit (all, with ``None``) and forget counts."""
+        with self._lock:
+            if key is None:
+                self._open.clear()
+                self._failures.clear()
+            else:
+                self._open.discard(key)
+                self._failures.pop(key, None)
+
+    def counters(self) -> dict:
+        """Exact breaker counters (telemetry registry source)."""
+        with self._lock:
+            return {"threshold": self.threshold,
+                    "open_keys": len(self._open),
+                    "trips": self._trips,
+                    "fallback_batches": self._fallback_batches}
+
+
+# -- checkpointed in-flight state ----------------------------------------------
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Everything needed to replay one outstanding request byte-identically.
+
+    ``rid`` is the id in the *source* engine (scheduler ``req_id`` or
+    ingest handle ``seq``) — replay maps it to a fresh handle.
+    ``deadline_ms`` is the *remaining* budget at snapshot time: absolute
+    deadlines are meaningless across a restore, so the deadline re-arms
+    relative to the replay submit.
+    """
+
+    rid: int
+    template: object                 # CircuitTemplate (picklable dataclass)
+    params: np.ndarray               # [P] float32
+    retries: int = 0
+    deadline_ms: float | None = None
+
+
+def _remaining_ms(deadline: float | None, now: float) -> float | None:
+    if deadline is None:
+        return None
+    return max((deadline - now) * 1e3, 0.0)
+
+
+def snapshot_records(source) -> list[RequestRecord]:
+    """Capture every outstanding (non-terminal) request as replay records.
+
+    ``source`` is a :class:`~repro.engine.scheduler.BatchScheduler` (queued
+    groups + backoff retry queue + un-retired in-flight window) or an
+    :class:`~repro.engine.ingest.IngestServer` (producer lanes + live
+    handles, which subsume its scheduler's view).  Snapshot a hand-cranked
+    or quiesced engine for an exact cut; snapshotting under live traffic
+    gives at-least-once replay semantics (a request retiring between the
+    snapshot and the crash replays once more).
+    """
+    server_handles = getattr(source, "pending_handles", None)
+    if server_handles is not None:
+        now = source.scheduler.clock()
+        return [RequestRecord(
+                    rid=h.seq, template=h.template,
+                    params=np.asarray(h.params, np.float32),
+                    retries=(h.request.retries if h.request is not None
+                             else 0),
+                    deadline_ms=_remaining_ms(
+                        h.request.deadline if h.request is not None
+                        else h.deadline_at, now))
+                for h in server_handles()]
+    now = source.clock()
+    return [RequestRecord(rid=r.req_id, template=r.template,
+                          params=np.asarray(r.params, np.float32),
+                          retries=r.retries,
+                          deadline_ms=_remaining_ms(r.deadline, now))
+            for r in source.outstanding()]
+
+
+def replay_records(records, target) -> dict[int, object]:
+    """Resubmit checkpointed records in ``rid`` order; -> {rid: handle}.
+
+    ``target`` is anything with the engine submit signature
+    (``submit(template, params, deadline_ms=...)``) — a fresh scheduler or
+    ingest server.  Submitting in ``rid`` order reproduces the original
+    arrival order, so grouping (and therefore padded batch sizes and
+    bitwise results) matches an undisturbed run of the same traffic.
+    """
+    out: dict[int, object] = {}
+    for rec in sorted(records, key=lambda r: r.rid):
+        dm = rec.deadline_ms
+        if dm is not None and dm <= 0.0:
+            # budget fully spent at snapshot time: submit with an epsilon
+            # deadline so the engine sheds it through the normal terminal
+            # path instead of the replay raising
+            dm = 1e-9
+        out[rec.rid] = target.submit(rec.template, rec.params,
+                                     deadline_ms=dm)
+    return out
+
+
+class ServingCheckpoint:
+    """Durable snapshots of outstanding serving state.
+
+    Records are encoded as a flat pytree —
+    ``[meta_json, params_0, template_0, params_1, template_1, ...]`` with
+    templates as pickled-bytes ``uint8`` leaves — and written through
+    :class:`repro.checkpoint.CheckpointManager`, inheriting its atomic
+    COMMITTED-marker commit, per-leaf sha256 integrity verification, and
+    keep-last-``k`` garbage collection.  :meth:`load` needs no ``like``
+    pytree: the leaf count comes from the checkpoint's own MANIFEST.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self._mgr = CheckpointManager(directory, keep=keep)
+
+    @property
+    def directory(self) -> str:
+        return self._mgr.directory
+
+    @staticmethod
+    def _encode(records) -> tuple[list, list]:
+        meta = []
+        leaves: list = []
+        for rec in records:
+            meta.append({"rid": int(rec.rid), "retries": int(rec.retries),
+                         "deadline_ms": rec.deadline_ms})
+            leaves.append(np.asarray(rec.params, np.float32))
+            leaves.append(np.frombuffer(pickle.dumps(rec.template),
+                                        np.uint8))
+        return [json.dumps(meta)] + leaves, meta
+
+    def save(self, epoch: int, records) -> str:
+        """Synchronously write one committed snapshot; returns its path."""
+        tree, _ = self._encode(records)
+        return self._mgr.save(epoch, tree)
+
+    def save_async(self, epoch: int, records) -> None:
+        """Background write (snapshot encoded synchronously, cheap)."""
+        tree, _ = self._encode(records)
+        self._mgr.save_async(epoch, tree)
+
+    def wait(self) -> None:
+        self._mgr.wait()
+
+    def latest_epoch(self) -> int | None:
+        return self._mgr.latest_step()
+
+    def load(self, epoch: int | None = None) -> list[RequestRecord]:
+        """Decode the records of ``epoch`` (latest committed by default).
+
+        Integrity-checked: every leaf is sha256-verified against the
+        checkpoint MANIFEST during restore.  Returns ``[]`` when no
+        committed checkpoint exists.
+        """
+        step = self._mgr.latest_step() if epoch is None else epoch
+        if step is None:
+            return []
+        # leaf count from the checkpoint's own manifest (layout documented
+        # in repro.checkpoint.checkpointing), so no `like` pytree is needed
+        path = os.path.join(self._mgr.directory, f"step_{step:06d}")
+        with open(os.path.join(path, "MANIFEST.json"),
+                  encoding="utf-8") as fh:
+            n_leaves = len(json.load(fh)["leaves"])
+        leaves = self._mgr.restore(step, [0] * n_leaves)
+        meta = json.loads(str(np.asarray(leaves[0])[()]))
+        if len(leaves) != 1 + 2 * len(meta):
+            raise ValueError(
+                f"checkpoint {path}: {len(leaves)} leaves do not match "
+                f"{len(meta)} records (expected {1 + 2 * len(meta)})")
+        records = []
+        for i, m in enumerate(meta):
+            params = np.asarray(leaves[1 + 2 * i], np.float32)
+            template = pickle.loads(
+                np.asarray(leaves[2 + 2 * i], np.uint8).tobytes())
+            records.append(RequestRecord(
+                rid=int(m["rid"]), template=template, params=params,
+                retries=int(m["retries"]), deadline_ms=m["deadline_ms"]))
+        return records

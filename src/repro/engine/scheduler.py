@@ -18,12 +18,24 @@ keeps the in-flight window open and ``sync`` retires it.
 Every request moves through an explicit lifecycle::
 
     QUEUED -> DISPATCHED -> DONE | FAILED
+               |    ^
+               v    | (redispatch after backoff)
+             RETRYING -> FAILED | SHED
 
 and no path drops a request: a batch that raises (at plan compile, dispatch,
-or device execution) marks exactly its own requests ``FAILED`` with the
-exception recorded on ``Request.error``, and every other batch still runs.
-Latencies are recorded only after device results are ready — an idle
-scheduler reports no latency at all rather than a fake 0.0 ms.
+or device execution) affects exactly its own requests, and every other
+batch still runs.  Without a retry policy a batch failure is terminal
+``FAILED`` with the exception recorded on ``Request.error``; with
+``retry=`` (a :class:`~repro.engine.resilience.RetryPolicy`) transient
+failures re-enqueue the failed chunk — intact, so its padded batch size
+and therefore its bitwise results are preserved — onto a backoff queue,
+and only a request whose retry budget is exhausted (or whose error is not
+transient) finalizes ``FAILED``.  Requests may carry a deadline
+(``submit(deadline_ms=...)``): a past-deadline request is ``SHED`` (a
+distinct terminal state, error :class:`DeadlineExceeded`) *before* its
+chunk wastes a dispatch.  Latencies are recorded only after device
+results are ready — an idle scheduler reports no latency at all rather
+than a fake 0.0 ms.
 
 The scheduler is safe under concurrent producers: the queue, the in-flight
 window, and every counter are guarded (``SchedulerStats`` carries its own
@@ -52,9 +64,10 @@ import numpy as np
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.engine.batch import BatchExecutor
+from repro.engine.resilience import DeadlineExceeded, SITE_FINALIZE
 from repro.engine.telemetry import (Histogram, NULL_TRACER, STAGE_DEVICE_READY,
                                     STAGE_DISPATCH, STAGE_DONE, STAGE_FAILED,
-                                    STAGE_SUBMIT)
+                                    STAGE_RETRYING, STAGE_SHED, STAGE_SUBMIT)
 from repro.engine.template import CircuitTemplate, template_of
 
 # retained latency samples for percentile estimates; totals stay exact
@@ -65,23 +78,46 @@ LATENCY_WINDOW = 4096
 class RequestState:
     """Lifecycle states of a scheduled request.
 
-    Transitions are strictly forward — ``QUEUED -> DISPATCHED -> DONE |
-    FAILED`` — and every submitted request reaches a terminal state: a
-    batch that raises at plan compile / dispatch time fails straight from
-    ``QUEUED``, a device-side failure fails from ``DISPATCHED``, and no
-    path re-queues or drops a request.  ``Request.done`` / ``Request.ok``
-    are the terminal-state predicates; ``Request.wait()`` blocks on a
-    ``DISPATCHED`` request's in-flight batch.
+    Transitions follow an explicit legal-transition table
+    (``_LEGAL_TRANSITIONS``): the fault-free path is strictly forward —
+    ``QUEUED -> DISPATCHED -> DONE | FAILED`` — and every submitted
+    request reaches a terminal state.  Under a retry policy a transient
+    batch failure moves its requests to ``RETRYING`` (from ``QUEUED`` for
+    a dispatch-time failure, from ``DISPATCHED`` for a device-side one)
+    and back to ``DISPATCHED`` on redispatch — the one sanctioned cycle;
+    a past-deadline request is ``SHED`` instead of dispatched.  No path
+    re-queues a terminal request or drops one.  ``Request.done`` /
+    ``Request.ok`` are the terminal-state predicates; ``Request.wait()``
+    blocks on a ``DISPATCHED`` request's in-flight batch.
     """
 
     QUEUED = "QUEUED"          # submitted, waiting in the scheduler queue
     DISPATCHED = "DISPATCHED"  # launched on device, result not yet retired
+    RETRYING = "RETRYING"      # transient failure; awaiting backoff redispatch
     DONE = "DONE"              # result available on Request.result
     FAILED = "FAILED"          # execution raised; Request.error holds why
+    SHED = "SHED"              # deadline exceeded before dispatch
 
 
-_STATE_ORDER = {RequestState.QUEUED: 0, RequestState.DISPATCHED: 1,
-                RequestState.DONE: 2, RequestState.FAILED: 2}
+_TERMINAL_STATES = frozenset(
+    {RequestState.DONE, RequestState.FAILED, RequestState.SHED})
+
+# the full legal lifecycle: forward-only plus the one sanctioned retry
+# cycle (RETRYING -> DISPATCHED).  RETRYING -> RETRYING is a redispatch
+# that failed again before reaching the device (dispatch-time fault).
+_LEGAL_TRANSITIONS = frozenset({
+    (RequestState.QUEUED, RequestState.DISPATCHED),
+    (RequestState.QUEUED, RequestState.RETRYING),
+    (RequestState.QUEUED, RequestState.FAILED),
+    (RequestState.QUEUED, RequestState.SHED),
+    (RequestState.DISPATCHED, RequestState.DONE),
+    (RequestState.DISPATCHED, RequestState.FAILED),
+    (RequestState.DISPATCHED, RequestState.RETRYING),
+    (RequestState.RETRYING, RequestState.DISPATCHED),
+    (RequestState.RETRYING, RequestState.RETRYING),
+    (RequestState.RETRYING, RequestState.FAILED),
+    (RequestState.RETRYING, RequestState.SHED),
+})
 
 
 @dataclasses.dataclass
@@ -97,6 +133,8 @@ class Request:
     latency: float | None = None     # seconds, submit -> result ready
     error: Exception | None = None
     history: list = dataclasses.field(default_factory=list)
+    retries: int = 0                 # completed retry re-enqueues so far
+    deadline: float | None = None    # absolute (scheduler-clock) deadline
     _batch: "InFlightBatch | None" = dataclasses.field(
         default=None, repr=False, compare=False)
     _key: tuple | None = dataclasses.field(
@@ -107,13 +145,16 @@ class Request:
             self.history.append(self.state)
 
     def _transition(self, new: str) -> None:
-        """Forward-only state change; raises on any backward/duplicate move.
+        """Legal-table state change; raises on any unsanctioned move.
 
         Enforced (not just documented) so a concurrency bug that double-
         retires or re-queues a request fails loudly in the stress suite
-        instead of silently corrupting the lifecycle history.
+        instead of silently corrupting the lifecycle history.  The table
+        admits exactly one cycle — ``RETRYING -> DISPATCHED`` — so a
+        terminal state still can never be left and a request can never be
+        dispatched twice without an intervening RETRYING.
         """
-        if _STATE_ORDER[new] <= _STATE_ORDER[self.state]:
+        if (self.state, new) not in _LEGAL_TRANSITIONS:
             raise RuntimeError(
                 f"request {self.req_id}: illegal lifecycle transition "
                 f"{self.state} -> {new} (history: {self.history})")
@@ -122,8 +163,8 @@ class Request:
 
     @property
     def done(self) -> bool:
-        """Terminal: the request ended DONE or FAILED."""
-        return self.state in (RequestState.DONE, RequestState.FAILED)
+        """Terminal: the request ended DONE, FAILED, or SHED."""
+        return self.state in _TERMINAL_STATES
 
     @property
     def ok(self) -> bool:
@@ -200,6 +241,8 @@ class SchedulerStats:
     batches: int = 0        #: guarded-by: _lock
     padded_slots: int = 0   #: guarded-by: _lock
     failed: int = 0         #: guarded-by: _lock
+    retried: int = 0        #: guarded-by: _lock
+    shed: int = 0           #: guarded-by: _lock
     # (not guarded-by _lock: the Histogram carries its own internal lock)
     latencies: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(LATENCY_WINDOW, name="latency"))
@@ -220,6 +263,15 @@ class SchedulerStats:
         with self._lock:
             self.failed += 1
 
+    def add_retried(self, k: int = 1) -> None:
+        """Count ``k`` retry re-enqueues (one per request per attempt)."""
+        with self._lock:
+            self.retried += k
+
+    def add_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
     def add_latency(self, seconds: float) -> None:
         self.latencies.record(seconds)
 
@@ -230,6 +282,8 @@ class SchedulerStats:
                 "batches": self.batches,
                 "padded_slots": self.padded_slots,
                 "failed": self.failed,
+                "retried": self.retried,
+                "shed": self.shed,
             }
         # no latency keys at all for an idle scheduler — a fabricated 0.0 ms
         # percentile is indistinguishable from a genuinely fast one
@@ -244,18 +298,31 @@ class SchedulerStats:
 
 
 class InFlightBatch:
-    """One launched batch whose device results have not been retired yet."""
+    """One launched batch whose device results have not been retired yet.
+
+    ``scheduler`` (when given) routes device-side failures through the
+    scheduler's retry path and feeds batch outcomes to the executor's
+    plan breaker; without it a failure is terminal (the pre-resilience
+    behavior, kept for direct construction in tests).  ``injector`` is
+    the chaos hook for the ``finalize`` site (transient device loss at
+    retire), and ``straggler`` — set by the scheduler from the injector's
+    schedule — makes :attr:`ready` report not-ready for that many extra
+    polls, modeling a retire hang without any wall-clock sleep.
+    """
 
     def __init__(self, plan, requests: list[Request], raw,
                  stats: SchedulerStats,
                  clock: Callable[[], float] = time.perf_counter,
-                 tracer=NULL_TRACER):
+                 tracer=NULL_TRACER, scheduler=None, injector=None):
         self.plan = plan
         self.requests = requests
         self.raw = raw                   # unwaited device array [padded, ...]
         self.stats = stats
         self.clock = clock
         self.tracer = tracer
+        self.scheduler = scheduler
+        self.injector = injector
+        self.straggler = 0               # extra not-ready polls (chaos runs)
         self.finalized = False           #: guarded-by: _flock
         self._flock = threading.Lock()   # finalize is idempotent *and* racy-
                                          # safe: wait() callers vs drain loop
@@ -268,6 +335,11 @@ class InFlightBatch:
         # early; taking _flock here would serialize polls behind finalize
         if self.finalized:
             return True
+        if self.straggler > 0:
+            # injected straggler: only the single-dispatcher poll path reads
+            # ready, so this unguarded countdown stays deterministic
+            self.straggler -= 1
+            return False
         try:
             return bool(self.raw.is_ready())
         except AttributeError:  # non-jax raw (test doubles): treat as ready
@@ -280,11 +352,18 @@ class InFlightBatch:
                 return
             self.finalized = True
             try:
+                if self.injector is not None:
+                    self.injector.fire(SITE_FINALIZE)
                 jax.block_until_ready(self.raw)
             except Exception as e:  # noqa: BLE001 — device-side failure
                 self.raw = None
-                _fail(self.requests, e, self.stats, self.clock(),
-                      tracer=self.tracer)
+                if self.scheduler is not None:
+                    # retry-aware path: transient faults re-enqueue the
+                    # whole chunk; budget-exhausted requests finalize FAILED
+                    self.scheduler._resolve_batch_failure(self.requests, e)
+                else:
+                    _fail(self.requests, e, self.stats, self.clock(),
+                          tracer=self.tracer)
                 return
             now = self.clock()
             states = self.plan.wrap_batch(self.raw, count=len(self.requests))
@@ -294,6 +373,10 @@ class InFlightBatch:
                 req._transition(RequestState.DONE)
                 self.stats.add_latency(req.latency)
             self.raw = None
+            if self.scheduler is not None:
+                # a success resets the plan breaker's consecutive-failure
+                # count for this chunk's key
+                self.scheduler._note_outcome(self.requests, ok=True)
             if self.tracer.enabled:
                 # device retire at ``now`` (the latency stamp), finalize —
                 # host-side wrap + lifecycle transitions — ends here
@@ -347,7 +430,7 @@ class BatchScheduler:
                  max_batch: int = 64, pad_to_pow2: bool = True,
                  inflight: int = 2, max_wait_ms: float | None = None,
                  clock: Callable[[], float] | None = None,
-                 tracer=None):
+                 tracer=None, retry=None):
         if inflight < 0:
             raise ValueError(f"inflight must be >= 0, got {inflight}")
         self.executor = executor if executor is not None else BatchExecutor()
@@ -355,6 +438,9 @@ class BatchScheduler:
         self.pad_to_pow2 = pad_to_pow2
         self.inflight = inflight
         self.max_wait_ms = max_wait_ms
+        # retry policy (repro.engine.resilience.RetryPolicy); None keeps the
+        # pre-resilience semantics: any batch failure is terminal FAILED
+        self.retry = retry
         self.stats = SchedulerStats()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._clock = clock if clock is not None else time.perf_counter
@@ -368,6 +454,11 @@ class BatchScheduler:
         # the queue, grouped by plan key, maintained incrementally so the
         # streaming trigger check in submit() stays O(group count)
         self._groups: dict[tuple, list[Request]] = {}  #: guarded-by: _lock, _work
+        # failed chunks awaiting backoff redispatch: (not_before, chunk).
+        # Chunks are re-enqueued *intact* — never merged with new arrivals —
+        # so a retried batch keeps its padded size and its results stay
+        # bitwise-equal to a fault-free run of the same traffic
+        self._retries: list[tuple[float, list[Request]]] = []  #: guarded-by: _lock, _work
 
     @property
     def clock(self) -> Callable[[], float]:
@@ -375,18 +466,62 @@ class BatchScheduler:
 
     @property
     def pending(self) -> list[Request]:
-        """Queued (not yet dispatched) requests, in submit order per group."""
+        """Queued (not yet dispatched) requests, in submit order per group,
+        plus any failed chunks awaiting their retry backoff."""
         with self._lock:
-            return [r for reqs in self._groups.values() for r in reqs]
+            out = [r for reqs in self._groups.values() for r in reqs]
+            out += [r for _, reqs in self._retries for r in reqs]
+        return out
+
+    @property
+    def backoff_pending(self) -> bool:
+        """True while any failed chunk awaits its retry backoff — drain
+        loops must keep ticking (timed sleeps) rather than wait untimed."""
+        with self._lock:
+            return bool(self._retries)
+
+    def outstanding(self) -> list[Request]:
+        """Every non-terminal request — queued, awaiting retry backoff, or
+        in the un-retired in-flight window — ordered by request id.  This
+        is the checkpoint snapshot set
+        (:func:`repro.engine.resilience.snapshot_records`)."""
+        with self._lock:
+            seen: dict[int, Request] = {}
+            for reqs in self._groups.values():
+                for r in reqs:
+                    seen[r.req_id] = r
+            for _, reqs in self._retries:
+                for r in reqs:
+                    seen[r.req_id] = r
+            for batch in self._window:
+                for r in batch.requests:
+                    if not r.done:
+                        seen[r.req_id] = r
+        return [seen[k] for k in sorted(seen)]
 
     # -- queueing -------------------------------------------------------------
     def submit(self, template: CircuitTemplate | Circuit,
-               params: Sequence[float] | None = None) -> Request:
-        """Enqueue one request; returns a future-like handle immediately."""
+               params: Sequence[float] | None = None, *,
+               deadline_ms: float | None = None,
+               deadline_at: float | None = None) -> Request:
+        """Enqueue one request; returns a future-like handle immediately.
+
+        ``deadline_ms`` arms a deadline that many milliseconds after the
+        submit stamp; ``deadline_at`` sets an absolute (scheduler-clock)
+        deadline instead, for callers that started the clock earlier (the
+        ingest front end stamps at producer-side enqueue).  A request past
+        its deadline at dispatch time is SHED, never dispatched.
+        """
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
         template, p = validate_params(template, params)
         with self._lock:
             req = Request(req_id=next(self._ids), template=template, params=p,
                           submitted=self._clock())
+            if deadline_at is not None:
+                req.deadline = float(deadline_at)
+            elif deadline_ms is not None:
+                req.deadline = req.submitted + deadline_ms / 1e3
             self._groups.setdefault(self._plan_key(req), []).append(req)
             self._work.notify_all()
         if self.tracer.enabled:
@@ -399,27 +534,30 @@ class BatchScheduler:
         return req
 
     def submit_sweep(self, template: CircuitTemplate,
-                     params_matrix) -> list[Request]:
+                     params_matrix, *,
+                     deadline_ms: float | None = None) -> list[Request]:
         """Submit one request per row of a ``[B, P]`` parameter matrix.
 
         A 1-D array is B separate bindings when the template takes one
         parameter, and a single P-parameter binding otherwise.
         """
-        return [self.submit(template, row)
+        return [self.submit(template, row, deadline_ms=deadline_ms)
                 for row in validate_sweep(template, params_matrix)]
 
     def wait_for_work(self, timeout: float | None = None) -> bool:
         """Block until submissions are queued (condition variable, no spin).
 
-        Returns True if work is queued, False on timeout.  This is the
-        drain-loop primitive that replaces polling ``pending`` in a busy
-        loop: producers signal the condition on every ``submit``.
+        Returns True if work is queued (including failed chunks awaiting
+        retry), False on timeout.  This is the drain-loop primitive that
+        replaces polling ``pending`` in a busy loop: producers signal the
+        condition on every ``submit`` (and the failure resolver on every
+        retry re-enqueue).
         """
         with self._work:
-            if self._groups:
+            if self._groups or self._retries:
                 return True
             self._work.wait(timeout)
-            return bool(self._groups)
+            return bool(self._groups or self._retries)
 
     # -- grouping -------------------------------------------------------------
     def _plan_key(self, req: Request) -> tuple:
@@ -453,6 +591,89 @@ class BatchScheduler:
                     fired.append(reqs)
         return fired
 
+    def _take_retries(self, force: bool = False) -> list[list[Request]]:
+        """Dequeue retry chunks whose backoff has elapsed (all when force —
+        explicit flush points override backoff delays)."""
+        with self._lock:
+            if not self._retries:
+                return []
+            now = self._clock()
+            due, later = [], []
+            for entry in self._retries:
+                (due if force or now >= entry[0] else later).append(entry)
+            self._retries = later
+        return [chunk for _, chunk in due]
+
+    # -- failure resolution ---------------------------------------------------
+    def _note_outcome(self, chunk: list[Request], ok: bool) -> None:
+        """Feed one batch outcome to the executor's plan breaker (if any)."""
+        breaker = getattr(self.executor, "breaker", None)
+        if breaker is None:
+            return
+        key = chunk[0]._key
+        if key is None:
+            return
+        if ok:
+            breaker.record_success(key)
+        else:
+            breaker.record_failure(key)
+
+    def _resolve_batch_failure(self, chunk: list[Request],
+                               error: Exception) -> None:
+        """Route one failed batch: retry transient faults, fail the rest.
+
+        Satisfies the no-drop contract under faults: every request in the
+        chunk either re-enqueues as one intact retry chunk (state
+        RETRYING, backoff per the policy) or finalizes FAILED (budget
+        exhausted, non-transient error, no policy, or past deadline).
+        Called from ``_dispatch_chunk`` (dispatch-time failure, requests
+        still QUEUED/RETRYING) and from ``InFlightBatch.finalize`` under
+        its idempotent-finalize lock (device-side failure, DISPATCHED).
+        """
+        now = self._clock()
+        self._note_outcome(chunk, ok=False)
+        to_retry: list[Request] = []
+        to_fail: list[Request] = []
+        for req in chunk:
+            in_deadline = req.deadline is None or now < req.deadline
+            if (self.retry is not None and in_deadline
+                    and self.retry.should_retry(error, req.retries + 1)):
+                to_retry.append(req)
+            else:
+                to_fail.append(req)
+        if to_fail:
+            _fail(to_fail, error, self.stats, now, tracer=self.tracer)
+        if not to_retry:
+            return
+        for req in to_retry:
+            req.retries += 1
+            req._batch = None
+            req._transition(RequestState.RETRYING)
+        self.stats.add_retried(len(to_retry))
+        attempt = max(r.retries for r in to_retry)
+        delay = self.retry.backoff_s(attempt, token=to_retry[0].req_id)
+        if self.tracer.enabled:
+            for req in to_retry:
+                self.tracer.record(req.req_id, STAGE_RETRYING, now,
+                                   attempt=req.retries,
+                                   error=type(error).__name__,
+                                   backoff_ms=round(delay * 1e3, 3))
+        with self._lock:
+            self._retries.append((now + delay, to_retry))
+            self._work.notify_all()
+
+    def _shed(self, requests: list[Request], now: float) -> None:
+        """Terminal SHED: past-deadline requests never waste a dispatch."""
+        for req in requests:
+            req.error = DeadlineExceeded(
+                f"request {req.req_id}: deadline exceeded "
+                f"{(now - req.deadline) * 1e3:.3f} ms before dispatch")
+            req.latency = now - req.submitted
+            req._transition(RequestState.SHED)
+            self.stats.add_shed()
+            if self.tracer.enabled:
+                self.tracer.record(req.req_id, STAGE_SHED, now)
+
     def _dispatch_groups(self, groups: list[list[Request]]) -> list[Request]:
         out: list[Request] = []
         for reqs in groups:
@@ -480,6 +701,15 @@ class BatchScheduler:
         producers are never blocked behind an XLA compile; only the window
         and lifecycle mutations are guarded.
         """
+        if any(r.deadline is not None for r in chunk):
+            now = self._clock()
+            expired = [r for r in chunk
+                       if r.deadline is not None and now >= r.deadline]
+            if expired:
+                self._shed(expired, now)
+                chunk = [r for r in chunk if not r.done]
+                if not chunk:
+                    return None
         template = chunk[0].template
         pm = np.stack([r.params for r in chunk])
         b = len(chunk)
@@ -489,7 +719,7 @@ class BatchScheduler:
         try:
             plan, raw = self.executor.dispatch_batch(template, pm)
         except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
-            _fail(chunk, e, self.stats, self._clock(), tracer=self.tracer)
+            self._resolve_batch_failure(chunk, e)
             return None
         self.stats.add_batch(padded - b)
         if self.tracer.enabled:
@@ -498,8 +728,12 @@ class BatchScheduler:
             for req in chunk:
                 self.tracer.record(req.req_id, STAGE_DISPATCH, now,
                                    batch=bid, rows=b, padded=padded)
+        injector = getattr(self.executor, "injector", None)
         batch = InFlightBatch(plan, chunk, raw, self.stats, clock=self._clock,
-                              tracer=self.tracer)
+                              tracer=self.tracer, scheduler=self,
+                              injector=injector)
+        if injector is not None:
+            batch.straggler = injector.draw_straggler()
         overflow: list[InFlightBatch] = []
         with self._lock:
             for req in chunk:
@@ -523,6 +757,8 @@ class BatchScheduler:
         newly launched batches.
         """
         launched: list[InFlightBatch] = []
+        for reqs in self._take_retries(force):
+            launched += self._dispatch_group(reqs)
         for reqs in self._take_triggered(force):
             launched += self._dispatch_group(reqs)
         while True:
@@ -550,13 +786,25 @@ class BatchScheduler:
 
         Each batch is retired (host blocks on device results) before the next
         one launches — the blocking baseline that ``drain_async`` pipelines.
+        Loops until the queue, retry backlog, and window are all empty, so a
+        request that faults and re-enqueues mid-drain is still terminal on
+        return (deduplicated by id: a retried request counts once).
         """
-        completed: list[Request] = []
-        for reqs in self._take_groups():
-            self._dispatch_group(reqs, finalize_each=True)
-            completed += reqs
-        self.sync()
-        return completed
+        completed: dict[int, Request] = {}
+        while True:
+            groups = self._take_retries(force=True) + self._take_groups()
+            if not groups:
+                with self._lock:
+                    window_empty = not self._window
+                if window_empty:
+                    break
+                self.sync()
+                continue
+            for reqs in groups:
+                self._dispatch_group(reqs, finalize_each=True)
+                for req in reqs:
+                    completed[req.req_id] = req
+        return list(completed.values())
 
     def drain_async(self, wait_ms: float | None = None) -> list[Request]:
         """Launch everything queued without retiring the in-flight window.
@@ -572,19 +820,31 @@ class BatchScheduler:
         """
         if wait_ms is not None:
             with self._lock:
-                empty = not self._groups
+                empty = not self._groups and not self._retries
             if empty:
                 self.wait_for_work(wait_ms / 1e3)
+        for reqs in self._take_retries():
+            self._dispatch_group(reqs)
         return self._dispatch_groups(self._take_groups())
 
     def sync(self) -> None:
-        """Retire every in-flight batch (oldest first)."""
+        """Retire every in-flight batch (oldest first), then flush any retry
+        backlog to terminal — a flush point overrides backoff delays, so a
+        caller observing ``sync()`` return knows nothing is still pending."""
         while True:
             with self._lock:
-                if not self._window:
-                    return
-                batch = self._window.popleft()
-            batch.finalize()
+                if self._window:
+                    batch = self._window.popleft()
+                else:
+                    batch = None
+            if batch is not None:
+                batch.finalize()
+                continue
+            chunks = self._take_retries(force=True)
+            if not chunks:
+                return
+            for chunk in chunks:
+                self._dispatch_group(chunk)
 
     # -- reporting ------------------------------------------------------------
     def report(self) -> dict:

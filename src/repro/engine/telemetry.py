@@ -53,6 +53,7 @@ __all__ = [
     "Span", "SpanTracer", "NULL_TRACER",
     "STAGE_ENQUEUE", "STAGE_SUBMIT", "STAGE_DISPATCH",
     "STAGE_DEVICE_READY", "STAGE_DONE", "STAGE_FAILED",
+    "STAGE_RETRYING", "STAGE_SHED",
     "VectorizationProfile", "vectorization_profile", "ServedActivity",
     "engine_registry",
 ]
@@ -279,6 +280,14 @@ def engine_registry(*, scheduler=None, executor=None,
         reg.register_source("cache", executor.stats.as_dict)
         reg.register_source("compile", executor.stats.compile_summary)
         reg.register_source("served", executor.activity.summary)
+        # resilience instruments ride along when installed (duck-typed so
+        # telemetry never imports the resilience layer)
+        injector = getattr(executor, "injector", None)
+        if injector is not None:
+            reg.register_source("faults", injector.counters)
+        breaker = getattr(executor, "breaker", None)
+        if breaker is not None:
+            reg.register_source("breaker", breaker.counters)
     return reg
 
 
@@ -288,19 +297,30 @@ STAGE_ENQUEUE = "ingest_enqueue"      # producer lane append (ingest only)
 STAGE_SUBMIT = "submit"               # scheduler submit (ticket merged)
 STAGE_DISPATCH = "dispatch"           # batch launched on device
 STAGE_DEVICE_READY = "device_ready"   # device results available
+STAGE_RETRYING = "retrying"           # transient fault; re-enqueued for retry
 STAGE_DONE = "done"                   # result delivered on the request
 STAGE_FAILED = "failed"               # terminal failure
+STAGE_SHED = "shed"                   # terminal: deadline exceeded pre-dispatch
 
-# forward-only stage order; the two terminals share a rank
+# display/sort rank only — lifecycle validation is the append-order state
+# machine in ``_build_tree`` (retries legally revisit dispatch, so a global
+# forward-only rank cannot express the record any more)
 _STAGE_RANK = {STAGE_ENQUEUE: 0, STAGE_SUBMIT: 1, STAGE_DISPATCH: 2,
-               STAGE_DEVICE_READY: 3, STAGE_DONE: 4, STAGE_FAILED: 4}
-_TERMINALS = (STAGE_DONE, STAGE_FAILED)
+               STAGE_DEVICE_READY: 3, STAGE_RETRYING: 4,
+               STAGE_DONE: 5, STAGE_FAILED: 5, STAGE_SHED: 5}
+_TERMINALS = (STAGE_DONE, STAGE_FAILED, STAGE_SHED)
 
 # child-span names derived from consecutive stage events
 SPAN_INGEST_WAIT = "ingest.wait"      # lane enqueue -> scheduler submit
 SPAN_QUEUE = "sched.queue"            # submit -> dispatch (grouping + aging)
 SPAN_EXECUTE = "device.execute"       # dispatch -> device results ready
 SPAN_FINALIZE = "finalize"            # device ready -> request terminal
+SPAN_RETRY = "retry.backoff"          # retrying -> next dispatch (or terminal)
+
+# child-span name keyed by the *leading* stage of a consecutive event pair
+_CHILD_NAME = {STAGE_ENQUEUE: SPAN_INGEST_WAIT, STAGE_SUBMIT: SPAN_QUEUE,
+               STAGE_DISPATCH: SPAN_EXECUTE,
+               STAGE_DEVICE_READY: SPAN_FINALIZE, STAGE_RETRYING: SPAN_RETRY}
 
 
 @dataclasses.dataclass
@@ -383,54 +403,88 @@ class SpanTracer:
 
     @staticmethod
     def _build_tree(rid: int, evs: list) -> Span:
-        by_stage: dict[str, dict] = {}
+        """Validate one request's append-ordered event list into a span tree.
+
+        Lifecycle is checked as a state machine over append order rather
+        than a global stage rank, because retries legally revisit stages:
+        each ``retrying`` event re-arms exactly one more ``dispatch`` /
+        ``device_ready`` pair, so a retried request still yields exactly
+        one well-formed tree with its re-dispatch intervals nested as
+        children (never a second orphan tree).
+        """
         for ev in evs:
-            stage = ev["stage"]
-            if stage not in _STAGE_RANK:
-                raise ValueError(f"request {rid}: unknown stage {stage!r}")
-            if stage in by_stage:
-                raise ValueError(f"request {rid}: duplicate {stage!r} event")
-            by_stage[stage] = ev
-        if STAGE_SUBMIT not in by_stage:
+            if ev["stage"] not in _STAGE_RANK:
+                raise ValueError(
+                    f"request {rid}: unknown stage {ev['stage']!r}")
+        enq = [ev for ev in evs if ev["stage"] == STAGE_ENQUEUE]
+        if len(enq) > 1:
+            raise ValueError(
+                f"request {rid}: duplicate {STAGE_ENQUEUE!r} event")
+        rest = [ev for ev in evs if ev["stage"] != STAGE_ENQUEUE]
+        if not any(ev["stage"] == STAGE_SUBMIT for ev in rest):
             raise ValueError(f"request {rid}: no submit event (orphan)")
-        terminal = [s for s in _TERMINALS if s in by_stage]
+        if rest[0]["stage"] != STAGE_SUBMIT:
+            raise ValueError(
+                f"request {rid}: {rest[0]['stage']!r} recorded before submit")
+        if sum(1 for ev in rest if ev["stage"] == STAGE_SUBMIT) > 1:
+            raise ValueError(
+                f"request {rid}: duplicate {STAGE_SUBMIT!r} event")
+        terminal = [ev["stage"] for ev in rest if ev["stage"] in _TERMINALS]
         if len(terminal) != 1:
             raise ValueError(
                 f"request {rid}: expected exactly one terminal stage, "
                 f"got {terminal or 'none'}")
-        ordered = sorted(by_stage.values(),
-                         key=lambda ev: _STAGE_RANK[ev["stage"]])
+        if rest[-1]["stage"] not in _TERMINALS:
+            raise ValueError(
+                f"request {rid}: {rest[-1]['stage']!r} recorded after the "
+                f"terminal stage")
+        dispatched = ready_seen = False
+        last_dispatch = None
+        retries = 0
+        for ev in rest[1:-1]:
+            stage = ev["stage"]
+            if stage == STAGE_DISPATCH:
+                if dispatched:
+                    raise ValueError(
+                        f"request {rid}: duplicate {STAGE_DISPATCH!r} event "
+                        f"(no intervening retry)")
+                dispatched, ready_seen = True, False
+                last_dispatch = ev
+            elif stage == STAGE_DEVICE_READY:
+                if not dispatched:
+                    raise ValueError(
+                        f"request {rid}: {STAGE_DEVICE_READY!r} before "
+                        f"{STAGE_DISPATCH!r}")
+                if ready_seen:
+                    raise ValueError(
+                        f"request {rid}: duplicate "
+                        f"{STAGE_DEVICE_READY!r} event")
+                ready_seen = True
+            elif stage == STAGE_RETRYING:
+                dispatched = ready_seen = False
+                retries += 1
+        ordered = enq + rest
         for a, b in zip(ordered, ordered[1:]):
             if b["ts"] < a["ts"]:
                 raise ValueError(
                     f"request {rid}: timestamps decrease "
                     f"{a['stage']}@{a['ts']} -> {b['stage']}@{b['ts']}")
-        end_ev = by_stage[terminal[0]]
+        end_ev = rest[-1]
 
         def attrs(ev):
             return {k: v for k, v in ev.items() if k not in ("stage", "ts")}
 
-        root = Span("request", ordered[0]["ts"], end_ev["ts"],
-                    args={"req_id": rid, "status": terminal[0],
-                          **attrs(by_stage[STAGE_SUBMIT]),
-                          **attrs(by_stage.get(STAGE_DISPATCH, {})),
-                          **attrs(end_ev)})
-        t_sub = by_stage[STAGE_SUBMIT]["ts"]
-        if STAGE_ENQUEUE in by_stage:
+        args = {"req_id": rid, "status": end_ev["stage"],
+                **attrs(rest[0]),
+                **attrs(last_dispatch or {}),
+                **attrs(end_ev)}
+        if retries:
+            args["retries"] = retries
+        root = Span("request", ordered[0]["ts"], end_ev["ts"], args=args)
+        for a, b in zip(ordered, ordered[1:]):
             root.children.append(
-                Span(SPAN_INGEST_WAIT, by_stage[STAGE_ENQUEUE]["ts"], t_sub,
-                     args=attrs(by_stage[STAGE_ENQUEUE])))
-        disp = by_stage.get(STAGE_DISPATCH)
-        root.children.append(
-            Span(SPAN_QUEUE, t_sub, disp["ts"] if disp else end_ev["ts"]))
-        if disp is not None:
-            ready = by_stage.get(STAGE_DEVICE_READY)
-            root.children.append(
-                Span(SPAN_EXECUTE, disp["ts"],
-                     ready["ts"] if ready else end_ev["ts"]))
-            if ready is not None:
-                root.children.append(
-                    Span(SPAN_FINALIZE, ready["ts"], end_ev["ts"]))
+                Span(_CHILD_NAME[a["stage"]], a["ts"], b["ts"],
+                     args=attrs(a) if a["stage"] == STAGE_ENQUEUE else {}))
         return root
 
     # -- export ---------------------------------------------------------------

@@ -32,8 +32,9 @@ import numpy as np
 
 from repro.core import circuits as C
 from repro.core.target import get_target
-from repro.engine import (BatchExecutor, BatchScheduler, IngestRejected,
-                          IngestServer, SpanTracer, engine_registry,
+from repro.engine import (BatchExecutor, BatchScheduler, FaultInjector,
+                          IngestRejected, IngestServer, PlanBreaker,
+                          RetryPolicy, SpanTracer, engine_registry,
                           hea_template, qaoa_template, template_of)
 from repro.testing import run_producers
 
@@ -56,11 +57,12 @@ def _make_traffic(workload: str, n: int, requests: int, seed: int):
     return out
 
 
-def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
+def _serve(sched: BatchScheduler, traffic, mode: str,
+           deadline_ms: float | None = None) -> float:
     """Push traffic through one scheduler; returns wall seconds."""
     t0 = time.perf_counter()
     for template, params in traffic:
-        sched.submit(template, params)
+        sched.submit(template, params, deadline_ms=deadline_ms)
     if mode == "async":
         sched.drain_async()
         sched.sync()
@@ -71,6 +73,7 @@ def _serve(sched: BatchScheduler, traffic, mode: str) -> float:
 
 def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
                   max_pending: int, policy: str,
+                  deadline_ms: float | None = None,
                   ) -> tuple[float, dict, IngestServer]:
     """K concurrent client threads through the ingest front end; returns
     wall seconds, the server report (scheduler + ingest_* fields), and the
@@ -84,7 +87,7 @@ def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
         starts.append(time.perf_counter())    # right after the barrier
         for template, params in chunks[i]:
             try:
-                srv.submit(template, params)
+                srv.submit(template, params, deadline_ms=deadline_ms)
             except IngestRejected:
                 pass    # shed load, keep serving; the server counts these
                         # (ingest_rejected in the report)
@@ -103,6 +106,9 @@ def _print_report(rep: dict, dt: float, label: str, args,
           f"({rep['requests'] / dt:.1f} circuits/s) "
           f"in {rep['batches']} batches, backend={args.backend}, "
           f"n={args.qubits}, failed={rep['failed']}")
+    if rep.get("retried") or rep.get("shed"):
+        print(f"[{label}] resilience: retried={rep.get('retried', 0)} "
+              f"shed={rep.get('shed', 0)}")
     if "latency_p50_ms" in rep:
         print(f"[{label}] latency ms: mean={rep['latency_mean_ms']:.1f} "
               f"p50={rep['latency_p50_ms']:.1f} "
@@ -203,6 +209,25 @@ def main(argv=None):
                     help="export the unified metrics-registry snapshot "
                          "(scheduler/cache/compile/served/ingest) as JSON")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos", type=float, default=None, metavar="RATE",
+                    help="fault-injection chaos mode: inject dispatch "
+                         "failures at this rate (docs/RESILIENCE.md); "
+                         "implies a retry policy so faulted batches replay")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-injection schedule seed (a chaos run is a "
+                         "pure function of seed + rate + traffic)")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="per-request retry budget for transient batch "
+                         "failures (default: 3 under --chaos, else no "
+                         "retry policy — batch failures stay terminal)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request serving deadline: requests still "
+                         "undispatched after this long are SHED, never "
+                         "dispatched")
+    ap.add_argument("--breaker-threshold", type=int, default=None,
+                    help="plan-key circuit breaker: quarantine a key to the "
+                         "generic lowering after this many consecutive "
+                         "batch failures")
     ap.add_argument("--verify-plans", action="store_true",
                     help="run the plan-IR verifier on every compiled plan "
                          "(repro.analysis; CI smoke mode)")
@@ -212,12 +237,23 @@ def main(argv=None):
                          "async speedup")
     args = ap.parse_args(argv)
 
+    injector = None
+    if args.chaos is not None:
+        injector = FaultInjector(seed=args.chaos_seed,
+                                 rates={"dispatch": args.chaos})
+    breaker = (PlanBreaker(args.breaker_threshold)
+               if args.breaker_threshold is not None else None)
+    retries = args.retries
+    if retries is None and args.chaos is not None:
+        retries = 3            # chaos without a retry policy would just fail
+    retry = RetryPolicy(max_retries=retries) if retries is not None else None
     executor = BatchExecutor(target=get_target(args.target),
                              backend=args.backend, f=args.f,
                              specialize=args.specialize == "on",
                              mesh=args.mesh,
                              max_local_qubits=args.max_local_qubits,
-                             verify=args.verify_plans)
+                             verify=args.verify_plans,
+                             injector=injector, breaker=breaker)
     # ingest mode streams by default (2ms age-out) — without a trigger the
     # drain loop would hold every underfull group until the final drain()
     max_wait_ms = args.max_wait_ms
@@ -228,19 +264,32 @@ def main(argv=None):
     tracer = SpanTracer() if (args.trace or args.trace_jsonl) else None
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
-                           max_wait_ms=max_wait_ms, tracer=tracer)
+                           max_wait_ms=max_wait_ms, tracer=tracer,
+                           retry=retry)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
 
     srv = None
     if args.mode == "ingest":
         dt, rep, srv = _serve_ingest(sched, traffic, max(1, args.clients),
-                                     args.max_pending, args.policy)
+                                     args.max_pending, args.policy,
+                                     deadline_ms=args.deadline_ms)
     else:
-        dt = _serve(sched, traffic, args.mode)
+        dt = _serve(sched, traffic, args.mode, deadline_ms=args.deadline_ms)
         rep = sched.report()
     _print_report(rep, dt, args.mode, args, cache=executor.cache,
                   activity=executor.activity)
+    if injector is not None:
+        fc = injector.counters()
+        print(f"[{args.mode}] chaos: seed={args.chaos_seed} "
+              f"rate={args.chaos} "
+              f"fired={fc['total_fired']}/{fc['dispatch_checks']} "
+              f"dispatch checks; retried={rep.get('retried', 0)}")
+    if breaker is not None:
+        bc = breaker.counters()
+        print(f"[{args.mode}] breaker: trips={bc['trips']} "
+              f"open_keys={bc['open_keys']} "
+              f"fallback_batches={bc['fallback_batches']}")
 
     if tracer is not None:
         if args.trace:

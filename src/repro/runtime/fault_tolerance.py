@@ -15,6 +15,7 @@ mitigation, and failure-injection hooks.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import statistics
 import time
@@ -27,13 +28,19 @@ from repro.checkpoint.checkpointing import CheckpointManager
 class StragglerMonitor:
     threshold: float = 3.0
     window: int = 32
-    times: list = dataclasses.field(default_factory=list)
+    times: collections.deque = None
     flagged: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        # bounded O(1) window (a plain list's pop(0) is O(n) per step);
+        # maxlen makes the eviction implicit in the append
+        if self.times is None:
+            self.times = collections.deque(maxlen=self.window)
+        elif not isinstance(self.times, collections.deque):
+            self.times = collections.deque(self.times, maxlen=self.window)
 
     def record(self, step: int, dt: float) -> bool:
         self.times.append(dt)
-        if len(self.times) > self.window:
-            self.times.pop(0)
         if len(self.times) >= 8:
             med = statistics.median(self.times)
             if dt > self.threshold * med:
@@ -61,8 +68,13 @@ def resilient_loop(
     max_restarts: int = 5,
     straggler: Optional[StragglerMonitor] = None,
     fault_hook: Optional[Callable[[int], None]] = None,
+    clock: Callable[[], float] = time.monotonic,
 ) -> tuple[Any, LoopReport]:
-    """Run ``num_steps`` with checkpoint/restart fault tolerance."""
+    """Run ``num_steps`` with checkpoint/restart fault tolerance.
+
+    ``clock`` follows the engine's injectable-clock convention: step
+    timings (straggler detection) read it instead of the wall clock, so a
+    ``FakeClock`` test drives deterministic straggler flags."""
     straggler = straggler or StragglerMonitor()
     restarts = 0
     losses: list = []
@@ -80,10 +92,10 @@ def resilient_loop(
         try:
             if fault_hook is not None:
                 fault_hook(step)
-            t0 = time.monotonic()
+            t0 = clock()
             batch = batch_fn(step)
             state, loss = step_fn(state, batch)
-            dt = time.monotonic() - t0
+            dt = clock() - t0
             straggler.record(step, dt)
             losses.append(float(loss))
             if (step + 1) % ckpt_every == 0 or step + 1 == num_steps:

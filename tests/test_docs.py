@@ -11,13 +11,15 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 def test_docs_exist_and_are_linked_from_readme():
     for doc in ("docs/ARCHITECTURE.md", "docs/BENCHMARKS.md",
-                "docs/OBSERVABILITY.md", "docs/ANALYSIS.md"):
+                "docs/OBSERVABILITY.md", "docs/RESILIENCE.md",
+                "docs/ANALYSIS.md"):
         assert os.path.exists(os.path.join(ROOT, doc)), doc
     with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as fh:
         readme = fh.read()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/BENCHMARKS.md" in readme
     assert "docs/OBSERVABILITY.md" in readme
+    assert "docs/RESILIENCE.md" in readme
     assert "docs/ANALYSIS.md" in readme
 
 
@@ -32,6 +34,7 @@ def test_no_broken_intra_repo_links():
              os.path.join(ROOT, "docs", "ARCHITECTURE.md"),
              os.path.join(ROOT, "docs", "BENCHMARKS.md"),
              os.path.join(ROOT, "docs", "OBSERVABILITY.md"),
+             os.path.join(ROOT, "docs", "RESILIENCE.md"),
              os.path.join(ROOT, "docs", "ANALYSIS.md")]
     for f in files:
         errors += check_links.check_file(f)
@@ -62,4 +65,13 @@ def test_analysis_doctests_execute():
         os.path.join(ROOT, "docs", "ANALYSIS.md"),
         module_relative=False, optionflags=doctest.NORMALIZE_WHITESPACE)
     assert results.attempted > 10, "ANALYSIS.md lost its usage snippets"
+    assert results.failed == 0, f"{results.failed} doctest failures"
+
+
+def test_resilience_doctests_execute():
+    """The usage snippets in RESILIENCE.md are real doctests; run them."""
+    results = doctest.testfile(
+        os.path.join(ROOT, "docs", "RESILIENCE.md"),
+        module_relative=False, optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert results.attempted > 10, "RESILIENCE.md lost its usage snippets"
     assert results.failed == 0, f"{results.failed} doctest failures"

@@ -1,0 +1,664 @@
+"""Fault-tolerant serving: injection, retry/replay, deadlines, checkpoint.
+
+The chaos methodology extends the ingest suite's bitwise-equality
+discipline (tests/test_ingest.py) to faulted runs: a retried chunk is
+re-enqueued *intact* — never merged with new arrivals — so its padded
+batch size, and therefore its compiled executable and its bits, match a
+fault-free run of the same traffic.  Fault schedules are seed-scheduled
+(:class:`repro.engine.FaultInjector`): every chaos test logs its seed in
+the assertion message, so a failure replays exactly.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.target import CPU_TEST
+from repro.engine import (BatchExecutor, BatchScheduler, DeadlineExceeded,
+                          FaultInjector, IngestServer, InjectedFault,
+                          PlanBreaker, PlanCache, RequestState, RetryPolicy,
+                          ServingCheckpoint, SpanTracer, engine_registry,
+                          hea_template, qaoa_template, replay_records,
+                          snapshot_records)
+from repro.engine.resilience import (SITE_COMPILE, SITE_DISPATCH,
+                                     SITE_FINALIZE, SITE_STRAGGLER)
+from repro.engine.template import CircuitTemplate, TemplateOp
+from repro.testing import FakeClock, run_producers
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _dense(state) -> np.ndarray:
+    return np.asarray(state.to_dense())
+
+
+def _broken_template(n: int = 4) -> CircuitTemplate:
+    """Execution genuinely raises: matrix shape disagrees with arity."""
+    return CircuitTemplate(
+        n, (TemplateOp("fixed", (0,), matrix=np.eye(4, dtype=np.complex64)),),
+        num_params=0, name="broken")
+
+
+# -- FaultInjector -------------------------------------------------------------
+
+def test_fault_injector_is_deterministic_and_counts_exactly():
+    def pattern(seed):
+        inj = FaultInjector(seed=seed, rates={SITE_DISPATCH: 0.5})
+        out = []
+        for _ in range(64):
+            try:
+                inj.fire(SITE_DISPATCH)
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out, inj.counters()
+
+    a, ca = pattern(7)
+    b, cb = pattern(7)
+    assert a == b and ca == cb               # pure function of the seed
+    c, _ = pattern(8)
+    assert a != c                            # and the seed matters
+    assert ca["dispatch_checks"] == 64
+    assert ca["dispatch_fired"] == sum(a) == ca["total_fired"]
+    assert 10 < ca["dispatch_fired"] < 54    # rate 0.5 actually injects
+
+
+def test_zero_rate_sites_consume_no_randomness():
+    """Adding a silent site to a schedule must not perturb the other
+    sites' draws (zero-rate checks never touch the RNG stream)."""
+    def fired(extra_site_checks):
+        inj = FaultInjector(seed=3, rates={SITE_DISPATCH: 0.5})
+        out = []
+        for _ in range(32):
+            for _ in range(extra_site_checks):
+                inj.fire(SITE_FINALIZE)      # rate 0: never draws
+            try:
+                inj.fire(SITE_DISPATCH)
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    assert fired(0) == fired(3)
+
+
+def test_max_faults_caps_then_heals():
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=2)
+    fails = 0
+    for _ in range(5):
+        try:
+            inj.fire(SITE_DISPATCH)
+        except InjectedFault:
+            fails += 1
+    assert fails == 2                       # fail-first-k-then-heal schedule
+    assert inj.counters()["dispatch_checks"] == 5
+
+
+def test_injector_rejects_unknown_sites_and_bad_rates():
+    with pytest.raises(ValueError, match="unknown injection site"):
+        FaultInjector(rates={"bogus": 0.5})
+    with pytest.raises(ValueError, match="must be in"):
+        FaultInjector(rates={SITE_DISPATCH: 1.5})
+
+
+# -- RetryPolicy ---------------------------------------------------------------
+
+def test_retry_policy_classification_and_budget():
+    pol = RetryPolicy(max_retries=2)
+    transient = InjectedFault(SITE_DISPATCH, 1)
+    assert pol.should_retry(transient, 1)
+    assert pol.should_retry(transient, 2)
+    assert not pol.should_retry(transient, 3)       # budget exhausted
+    assert not pol.should_retry(ValueError("bad"), 1)  # not transient
+    assert pol.should_retry(TimeoutError(), 1)
+    assert RetryPolicy(retry_all=True).should_retry(ValueError("x"), 1)
+
+
+def test_retry_policy_backoff_deterministic_capped_jittered():
+    pol = RetryPolicy(backoff_base_ms=1.0, backoff_factor=2.0,
+                      backoff_max_ms=8.0, jitter_frac=0.25)
+    # deterministic: same (token, attempt) -> same backoff, no RNG state
+    assert pol.backoff_s(2, token=5) == pol.backoff_s(2, token=5)
+    assert pol.backoff_s(2, token=5) != pol.backoff_s(2, token=6)
+    for attempt, base_ms in ((1, 1.0), (2, 2.0), (3, 4.0), (4, 8.0),
+                             (10, 8.0)):                     # capped
+        got = pol.backoff_s(attempt, token=0) * 1e3
+        assert base_ms * 0.75 <= got <= base_ms * 1.25, (attempt, got)
+
+
+# -- PlanBreaker ---------------------------------------------------------------
+
+def test_plan_breaker_trips_resets_and_counts():
+    br = PlanBreaker(threshold=2)
+    key = ("k",)
+    assert not br.record_failure(key)
+    br.record_success(key)                   # success resets the count
+    assert not br.record_failure(key)
+    assert br.record_failure(key)            # second consecutive: trips
+    assert br.is_open(key)
+    br.record_success(key)                   # open stays open (no flapping)
+    assert br.is_open(key)
+    assert br.open_keys() == [key]
+    assert br.counters()["trips"] == 1 and br.counters()["open_keys"] == 1
+    br.reset(key)
+    assert not br.is_open(key)
+
+
+# -- scheduler retry path (the terminal-failure bug fix) -----------------------
+
+def test_transient_dispatch_fault_retries_to_done():
+    """The satellite-1 bug fix: a batch-level transient exception no longer
+    permanently fails its requests — the chunk re-enqueues and completes."""
+    cache = PlanCache()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache,
+                       injector=inj)
+    sched = BatchScheduler(ex, max_batch=4, retry=RetryPolicy(max_retries=3))
+    t = qaoa_template(4, 1)
+    reqs = sched.submit_sweep(t, np.linspace(0.1, 0.8, 8).reshape(4, 2))
+    done = sched.drain()
+    assert len(done) == 4 and all(r.ok for r in done)
+    for r in reqs:
+        assert r.history == [RequestState.QUEUED, RequestState.RETRYING,
+                             RequestState.DISPATCHED, RequestState.DONE]
+        assert r.retries == 1
+    s = sched.stats.summary()
+    assert s["retried"] == 4 and s["failed"] == 0
+    assert inj.counters()["dispatch_fired"] == 1
+
+
+def test_transient_finalize_fault_retries_after_dispatched():
+    """Device-side loss (finalize site): DISPATCHED -> RETRYING ->
+    redispatch -> DONE, under the idempotent-finalize lock."""
+    inj = FaultInjector(seed=0, rates={SITE_FINALIZE: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=4, retry=RetryPolicy(max_retries=3))
+    t = qaoa_template(4, 1)
+    reqs = sched.submit_sweep(t, np.linspace(0.1, 0.8, 8).reshape(4, 2))
+    sched.drain()
+    for r in reqs:
+        assert r.ok
+        assert r.history == [RequestState.QUEUED, RequestState.DISPATCHED,
+                             RequestState.RETRYING, RequestState.DISPATCHED,
+                             RequestState.DONE]
+
+
+def test_compile_fault_is_transient_too():
+    inj = FaultInjector(seed=0, rates={SITE_COMPILE: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2, retry=RetryPolicy(max_retries=2))
+    r, = sched.submit_sweep(qaoa_template(4, 1), np.asarray([[0.3, 0.4]]))
+    sched.drain()
+    assert r.ok and r.retries == 1
+
+
+def test_retry_budget_exhaustion_finalizes_failed():
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0})   # never heals
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=4, retry=RetryPolicy(max_retries=2))
+    reqs = sched.submit_sweep(qaoa_template(4, 1),
+                              np.asarray([[0.1, 0.2], [0.3, 0.4]]))
+    done = sched.drain()
+    assert len(done) == 2
+    for r in reqs:
+        assert r.state == RequestState.FAILED
+        assert isinstance(r.error, InjectedFault)
+        assert r.retries == 2               # budget spent before FAILED
+    s = sched.stats.summary()
+    assert s["failed"] == 2 and s["retried"] == 4
+
+
+def test_non_transient_error_fails_fast_despite_retry_policy():
+    ex = BatchExecutor(target=CPU_TEST, backend="planar")
+    sched = BatchScheduler(ex, max_batch=2, retry=RetryPolicy(max_retries=5))
+    r = sched.submit(_broken_template())
+    sched.drain()
+    assert r.state == RequestState.FAILED and r.retries == 0
+    assert sched.stats.summary()["retried"] == 0
+
+
+def test_without_retry_policy_failure_stays_terminal():
+    """retry=None keeps the pre-resilience semantics bit for bit."""
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2)
+    r = sched.submit(qaoa_template(4, 1), [0.3, 0.4])
+    sched.drain()
+    assert r.state == RequestState.FAILED
+    assert r.history == [RequestState.QUEUED, RequestState.FAILED]
+
+
+# -- deadlines -----------------------------------------------------------------
+
+def test_past_deadline_requests_are_shed_not_dispatched():
+    clock = FakeClock()
+    ex = BatchExecutor(target=CPU_TEST, backend="planar")
+    sched = BatchScheduler(ex, max_batch=4, clock=clock)
+    t = qaoa_template(4, 1)
+    doomed = sched.submit(t, [0.1, 0.2], deadline_ms=5.0)
+    safe = sched.submit(t, [0.3, 0.4], deadline_ms=10_000.0)
+    clock.advance(0.006)                     # 6ms: past doomed's deadline
+    batches_before = ex.activity.summary()["batches"]
+    sched.drain()
+    assert doomed.state == RequestState.SHED
+    assert isinstance(doomed.error, DeadlineExceeded)
+    assert not doomed.ok and doomed.done
+    assert safe.ok
+    s = sched.stats.summary()
+    assert s["shed"] == 1 and s["failed"] == 0
+    # the shed request never reached the device: one 1-row dispatch only
+    assert ex.activity.summary()["batches"] == batches_before + 1
+
+
+def test_deadline_also_bounds_retries():
+    """A chunk that faults keeps retrying only while within deadline."""
+    clock = FakeClock()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0})
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2, clock=clock,
+                           retry=RetryPolicy(max_retries=100,
+                                             backoff_base_ms=1.0))
+    r = sched.submit(qaoa_template(4, 1), [0.3, 0.4], deadline_ms=3.0)
+    sched.poll(force=True)                   # first dispatch faults
+    assert r.state == RequestState.RETRYING
+    clock.advance(0.005)                     # past the deadline
+    sched.drain()
+    assert r.done and r.state == RequestState.SHED
+    assert isinstance(r.error, DeadlineExceeded)
+    assert r.retries < 100                   # deadline cut the retry loop
+    assert r.history == [RequestState.QUEUED, RequestState.RETRYING,
+                         RequestState.SHED]
+
+
+def test_invalid_deadlines_rejected():
+    sched = BatchScheduler(BatchExecutor(target=CPU_TEST, backend="planar"))
+    with pytest.raises(ValueError, match="deadline_ms"):
+        sched.submit(qaoa_template(4, 1), [0.1, 0.2], deadline_ms=0.0)
+
+
+# -- plan-key circuit breaker --------------------------------------------------
+
+def test_breaker_quarantines_failing_key_to_generic_fallback():
+    cache = PlanCache()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=2)
+    br = PlanBreaker(threshold=2)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache,
+                       injector=inj, breaker=br, specialize=True)
+    sched = BatchScheduler(ex, max_batch=2)   # no retry: each failure counts
+    t = qaoa_template(4, 1)
+    key = ex.plan_key(t)
+    sched.submit(t, [0.1, 0.2]); sched.drain()     # failure 1
+    sched.submit(t, [0.3, 0.4]); sched.drain()     # failure 2: trips
+    assert br.is_open(key)
+    r = sched.submit(t, [0.5, 0.6]); sched.drain() # injector healed: serves
+    assert r.ok
+    c = br.counters()
+    assert c["trips"] == 1 and c["fallback_batches"] >= 1
+    # the fallback is a *distinct* generic plan, not the quarantined one
+    assert any("|generic" in k for k in ex.activity.per_plan())
+
+
+def test_breaker_success_resets_pre_trip_count():
+    br = PlanBreaker(threshold=2)
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj,
+                       breaker=br)
+    sched = BatchScheduler(ex, max_batch=2, retry=RetryPolicy())
+    t = qaoa_template(4, 1)
+    r = sched.submit(t, [0.1, 0.2])
+    sched.drain()                            # fault, retry, success
+    assert r.ok
+    assert not br.is_open(ex.plan_key(t))    # the success reset the count
+    assert br.counters()["trips"] == 0
+
+
+# -- straggler injection -------------------------------------------------------
+
+def test_straggler_pins_batch_not_ready_for_n_polls():
+    inj = FaultInjector(seed=0, rates={SITE_STRAGGLER: 1.0},
+                        straggler_polls=3)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2, inflight=4)
+    sched.submit(qaoa_template(4, 1), [0.3, 0.4])
+    (batch,) = sched.drain_async()[0]._batch,
+    assert batch.straggler == 3
+    polls = 0
+    while not batch.ready:
+        polls += 1
+    assert polls >= 3                        # pinned, no wall-clock sleep
+    sched.sync()
+    assert all(r.ok for r in batch.requests)
+
+
+# -- telemetry integration -----------------------------------------------------
+
+def test_retry_spans_form_one_tree_and_counters_export():
+    tracer = SpanTracer()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    br = PlanBreaker()
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj,
+                       breaker=br)
+    sched = BatchScheduler(ex, max_batch=2, tracer=tracer,
+                           retry=RetryPolicy(max_retries=2))
+    reqs = sched.submit_sweep(qaoa_template(4, 1),
+                              np.asarray([[0.1, 0.2], [0.3, 0.4]]))
+    sched.drain()
+    assert all(r.ok for r in reqs)
+    trees = tracer.span_trees()              # validates: exactly one tree
+    assert len(trees) == 2
+    for tree in trees:
+        assert tree.args["retries"] == 1
+        names = [c.name for c in tree.children]
+        assert names == ["sched.queue", "retry.backoff", "device.execute",
+                         "finalize"]
+    # exact counters through the unified registry
+    snap = engine_registry(scheduler=sched, executor=ex).snapshot()
+    assert snap["faults_dispatch_fired"] == 1
+    assert snap["faults_dispatch_checks"] == 2
+    assert snap["scheduler_retried"] == 2
+    assert snap["breaker_trips"] == 0
+
+
+def test_shed_span_is_a_valid_terminal():
+    clock = FakeClock()
+    tracer = SpanTracer()
+    ex = BatchExecutor(target=CPU_TEST, backend="planar")
+    sched = BatchScheduler(ex, max_batch=2, clock=clock, tracer=tracer)
+    sched.submit(qaoa_template(4, 1), [0.1, 0.2], deadline_ms=1.0)
+    clock.advance(0.002)
+    sched.drain()
+    (tree,) = tracer.span_trees()
+    assert tree.args["status"] == "shed"
+
+
+def test_trace_report_accepts_retried_and_shed_requests(tmp_path):
+    """tools/trace_report.py summarizes a faulted run's JSONL without
+    flagging the repeated dispatch events as duplicates."""
+    tracer = SpanTracer()
+    clock = FakeClock()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2, clock=clock, tracer=tracer,
+                           retry=RetryPolicy(max_retries=2))
+    sched.submit(qaoa_template(4, 1), [0.1, 0.2])
+    sched.submit(qaoa_template(4, 1), [0.3, 0.4], deadline_ms=1.0)
+    clock.advance(0.002)                     # sheds the second request
+    sched.drain()
+    path = tmp_path / "events.jsonl"
+    tracer.write_jsonl(str(path))
+
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    try:
+        import trace_report
+    finally:
+        sys.path.pop(0)
+    spans = trace_report.load_jsonl(path.read_text().splitlines())
+    rep = trace_report.summarize(spans)
+    assert rep["requests"] == 2
+    assert rep["status"] == {"done": 1, "shed": 1}
+    assert "retry.backoff" in rep["stages"]
+    roots = [s for s in spans if s["name"] == "request"]
+    assert sum(s["args"].get("retries", 0) for s in roots) == 1
+
+
+# -- chaos harness: 8 producers, >=10% faults, bitwise + no drops --------------
+
+@pytest.mark.timeout(300)
+def test_chaos_8_producers_no_drops_bitwise_and_exact_counters():
+    """The tentpole chaos guarantee: under a seeded >=10% dispatch-fault
+    schedule with 8 barrier-synchronized producers, zero requests drop or
+    duplicate, every retried result is bitwise-equal to a fault-free run
+    on the same executables, and the retry counters export exactly."""
+    seed = 11
+    templates = [qaoa_template(5, 1), qaoa_template(5, 2), hea_template(5, 1)]
+    per_producer = 6                       # 8 * 6 = 48; 16 per template
+    max_batch = 4                          # every batch exactly full
+    cache = PlanCache()
+
+    def traffic_for(i):
+        rng = np.random.default_rng(100 + i)
+        return [(templates[j % len(templates)],
+                 rng.uniform(-np.pi, np.pi,
+                             templates[j % len(templates)].num_params))
+                for j in range(per_producer)]
+
+    # fault-free oracle: single-threaded, same cache -> same executables
+    ex0 = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache)
+    sched0 = BatchScheduler(ex0, max_batch=max_batch)
+    oracle = {}
+    for i in range(8):
+        for j, (t, p) in enumerate(traffic_for(i)):
+            oracle[(i, j)] = sched0.submit(t, p)
+    sched0.drain()
+    assert all(r.ok for r in oracle.values())
+
+    inj = FaultInjector(seed=seed, rates={SITE_DISPATCH: 0.15})
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache,
+                       injector=inj)
+    tracer = SpanTracer()
+    sched = BatchScheduler(ex, max_batch=max_batch, inflight=2,
+                           max_wait_ms=60_000.0, tracer=tracer,
+                           retry=RetryPolicy(max_retries=10))
+    # scheduler-owned knobs configured on the scheduler, server wraps it
+    srv = IngestServer(scheduler=sched)
+
+    def producer(i: int):
+        return [srv.submit(t, p) for t, p in traffic_for(i)]
+
+    slots = run_producers(8, producer, timeout=240)
+    assert srv.drain(timeout=240), f"chaos drain timed out (seed={seed})"
+    rep = srv.report()
+    srv.close()
+
+    handles = [h for hs in slots for h in hs]
+    # no drops: every handle resolved OK (transient faults all retried)
+    assert all(h.done() for h in handles), f"dropped handles (seed={seed})"
+    states = [h.result() for h in handles]
+    # no duplicates: one scheduler request per handle, all distinct
+    ids = [h.request.req_id for h in handles]
+    assert len(set(ids)) == len(ids) == 48, f"duplicated ids (seed={seed})"
+    # the schedule actually exercised the retry path
+    fired = inj.counters()["dispatch_fired"]
+    assert fired > 0, f"no faults fired (seed={seed})"
+    assert rep["failed"] == 0 and rep["retried"] > 0, (seed, rep)
+    # bitwise: every result equals the fault-free oracle's
+    mismatches = [
+        (i, j)
+        for i, hs in enumerate(slots)
+        for j, h in enumerate(hs)
+        if not np.array_equal(_dense(h.result()), _dense(oracle[(i, j)].result))
+    ]
+    assert not mismatches, f"bitwise mismatches {mismatches} (seed={seed})"
+    # spans: every request one well-formed tree, retries nested not orphaned
+    trees = tracer.span_trees()
+    assert len(trees) == 48
+    span_retries = sum(t.args.get("retries", 0) for t in trees)
+    assert span_retries == rep["retried"]    # exact, not approximate
+    assert states is not None
+
+
+# -- checkpointed in-flight state ----------------------------------------------
+
+def test_serving_checkpoint_roundtrip(tmp_path):
+    t = qaoa_template(4, 2)
+    ckpt = ServingCheckpoint(str(tmp_path / "ck"))
+    assert ckpt.load() == []                 # no checkpoint yet: empty
+    ex = BatchExecutor(target=CPU_TEST, backend="planar")
+    sched = BatchScheduler(ex, max_batch=4)
+    sched.submit(t, [0.1, 0.2, 0.3, 0.4], deadline_ms=50.0)
+    sched.submit(t, [0.5, 0.6, 0.7, 0.8])
+    records = snapshot_records(sched)
+    assert [r.rid for r in records] == [0, 1]
+    ckpt.save(0, records)
+    assert ckpt.latest_epoch() == 0
+    back = ckpt.load()
+    assert len(back) == 2
+    for orig, rec in zip(records, back):
+        assert rec.rid == orig.rid and rec.retries == orig.retries
+        assert rec.template.structure_key() == orig.template.structure_key()
+        np.testing.assert_array_equal(rec.params, orig.params)
+    assert back[0].deadline_ms is not None and back[0].deadline_ms <= 50.0
+    assert back[1].deadline_ms is None
+
+
+@pytest.mark.timeout(300)
+def test_crash_restart_replays_in_flight_requests_bitwise(tmp_path):
+    """Satellite 3: kill the drain loop mid-flight (requests DISPATCHED,
+    pinned un-retired by an injected straggler), restore from checkpoint,
+    and the replay completes every outstanding id — zero drops, zero
+    duplicates, bitwise-equal to an undisturbed run on the same
+    executables."""
+    t = qaoa_template(5, 1)
+    n_req = 12
+    max_batch = 4
+    rng = np.random.default_rng(42)
+    params = rng.uniform(-np.pi, np.pi, (n_req, 2))
+    cache = PlanCache()
+
+    # undisturbed reference run (warms the executables the replay reuses)
+    ex0 = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache)
+    sched0 = BatchScheduler(ex0, max_batch=max_batch)
+    ref = sched0.submit_sweep(t, params)
+    sched0.drain()
+    ref_states = [_dense(r.result) for r in ref]
+
+    # crash run: hand-cranked ingest server; a straggler schedule pins
+    # every launched batch un-retired, so the kill lands after DISPATCHED
+    inj = FaultInjector(seed=1, rates={SITE_STRAGGLER: 1.0},
+                        straggler_polls=10_000)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache,
+                       injector=inj)
+    sched = BatchScheduler(ex, max_batch=max_batch, inflight=8,
+                           max_wait_ms=None)
+    srv = IngestServer(scheduler=sched, autostart=False)
+    handles = [srv.submit(t, row) for row in params]
+    srv.step()                               # dispatches 3 full batches
+    dispatched = [h for h in handles
+                  if h.request is not None
+                  and h.request.state == RequestState.DISPATCHED]
+    assert len(dispatched) == n_req          # all in flight, none retired
+
+    ckpt = ServingCheckpoint(str(tmp_path / "ck"))
+    records = snapshot_records(srv)
+    assert sorted(r.rid for r in records) == list(range(n_req))
+    ckpt.save(0, records)
+    srv._abort(RuntimeError("simulated drain-loop kill"))   # the crash
+    for h in handles:
+        assert h.exception() is not None     # crash failed every handle
+
+    # restore into a fresh engine on the same plan cache
+    restored = ckpt.load()
+    ex2 = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache)
+    sched2 = BatchScheduler(ex2, max_batch=max_batch)
+    replayed = replay_records(restored, sched2)
+    sched2.drain()
+    # zero drops, zero duplicates: exactly the outstanding ids, once each
+    assert sorted(replayed) == list(range(n_req))
+    assert all(req.ok for req in replayed.values())
+    for rid, req in replayed.items():
+        np.testing.assert_array_equal(_dense(req.result), ref_states[rid])
+
+
+# -- hypothesis: no-drop invariant over random fault schedules -----------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10**6),
+       rate=st.floats(0.0, 0.9),
+       max_retries=st.integers(0, 6))
+def test_property_every_request_terminal_and_counters_consistent(
+        seed, rate, max_retries):
+    """For any seeded fault schedule and retry budget: every request
+    reaches a terminal state, terminal states partition into DONE/FAILED
+    exactly, and the retried counter equals the sum of per-request retry
+    counts."""
+    inj = FaultInjector(seed=seed, rates={SITE_DISPATCH: rate})
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=4,
+                           retry=RetryPolicy(max_retries=max_retries))
+    t = qaoa_template(4, 1)
+    reqs = sched.submit_sweep(t, np.linspace(0.1, 2.0, 20).reshape(10, 2))
+    done = sched.drain()
+    assert len(done) == 10                   # drain returns each id once
+    msg = f"(seed={seed}, rate={rate}, budget={max_retries})"
+    assert all(r.done for r in reqs), f"non-terminal request {msg}"
+    s = sched.stats.summary()
+    n_ok = sum(r.ok for r in reqs)
+    n_fail = sum(r.state == RequestState.FAILED for r in reqs)
+    assert n_ok + n_fail == 10, f"bad terminal partition {msg}"
+    assert s["failed"] == n_fail, msg
+    assert s["retried"] == sum(r.retries for r in reqs), msg
+    for r in reqs:
+        if r.state == RequestState.FAILED and max_retries > 0:
+            assert r.retries == max_retries, f"budget not spent {msg}"
+
+
+# -- runtime/fault_tolerance modernization (satellite 2) -----------------------
+
+def test_straggler_monitor_uses_bounded_deque():
+    import collections
+    from repro.runtime.fault_tolerance import StragglerMonitor
+    mon = StragglerMonitor(window=8)
+    assert isinstance(mon.times, collections.deque)
+    for i in range(100):
+        mon.record(i, 1.0)
+    assert len(mon.times) == 8               # bounded, O(1) eviction
+    assert mon.record(100, 10.0)             # 10x the median: flagged
+    assert mon.flagged[-1][0] == 100
+
+
+def test_resilient_loop_takes_injected_clock():
+    from repro.checkpoint.checkpointing import CheckpointManager
+    from repro.runtime.fault_tolerance import (StragglerMonitor,
+                                               resilient_loop)
+    import tempfile
+    clock = FakeClock()
+
+    def step_fn(state, batch):
+        clock.advance(10.0 if batch == 9 else 1.0)   # step 9: a straggler
+        return state + 1, float(batch)
+
+    with tempfile.TemporaryDirectory() as d:
+        mon = StragglerMonitor(threshold=3.0, window=16)
+        state, rep = resilient_loop(
+            step_fn=step_fn, init_state=0, batch_fn=lambda s: s,
+            num_steps=12, ckpt=CheckpointManager(d), ckpt_every=100,
+            straggler=mon, clock=clock)
+    assert state == 12 and rep.restarts == 0
+    assert rep.stragglers == 1               # deterministic via FakeClock
+    assert mon.flagged[0][0] == 9
+
+
+# -- lifecycle hardening -------------------------------------------------------
+
+def test_terminal_states_cannot_be_left():
+    ex = BatchExecutor(target=CPU_TEST, backend="planar")
+    sched = BatchScheduler(ex, max_batch=2)
+    r = sched.submit(qaoa_template(4, 1), [0.1, 0.2])
+    sched.drain()
+    assert r.ok
+    for bad in (RequestState.RETRYING, RequestState.DISPATCHED,
+                RequestState.QUEUED, RequestState.SHED):
+        with pytest.raises(RuntimeError, match="illegal lifecycle"):
+            r._transition(bad)
+
+
+def test_outstanding_and_backoff_pending_views():
+    clock = FakeClock()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", injector=inj)
+    sched = BatchScheduler(ex, max_batch=2, clock=clock,
+                           retry=RetryPolicy(max_retries=2,
+                                             backoff_base_ms=5.0))
+    t = qaoa_template(4, 1)
+    a = sched.submit(t, [0.1, 0.2])
+    b = sched.submit(t, [0.3, 0.4])
+    assert [r.req_id for r in sched.outstanding()] == [a.req_id, b.req_id]
+    assert not sched.backoff_pending
+    sched.poll(force=True)                   # dispatch faults -> backoff
+    assert sched.backoff_pending
+    assert [r.req_id for r in sched.outstanding()] == [a.req_id, b.req_id]
+    sched.drain()                            # force-flushes the backoff
+    assert not sched.backoff_pending and sched.outstanding() == []
+    assert a.ok and b.ok

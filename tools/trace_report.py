@@ -18,7 +18,13 @@ import json
 import sys
 
 
-STAGE_ORDER = ["ingest.wait", "sched.queue", "device.execute", "finalize"]
+STAGE_ORDER = ["ingest.wait", "sched.queue", "device.execute", "finalize",
+               "retry.backoff"]
+
+# lifecycle stages a retried request legally records more than once
+# (each retry re-arms one more dispatch/device_ready pair)
+_REPEATABLE = {"dispatch", "device_ready", "retrying"}
+_TERMINALS = ("done", "failed", "shed")
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -58,8 +64,12 @@ def load_jsonl(lines: list[str]) -> list[dict]:
 
     The JSONL log holds point events (stage + ts per req_id); stage spans
     are reconstructed from consecutive lifecycle stages per request.
+    Retried requests legally repeat ``dispatch`` / ``device_ready`` /
+    ``retrying`` (one re-dispatch per retry); every repeat still nests
+    under the request's single span tree — each ``retrying`` event becomes
+    a ``retry.backoff`` span ending at its re-dispatch (or the terminal).
     """
-    events_by_req: dict = collections.defaultdict(dict)
+    events_by_req: dict = collections.defaultdict(list)
     for i, line in enumerate(lines):
         if not line.strip():
             continue
@@ -67,31 +77,57 @@ def load_jsonl(lines: list[str]) -> list[dict]:
         for field in ("req_id", "stage", "ts"):
             if field not in ev:
                 raise ValueError(f"line {i + 1}: missing field {field!r}")
-        if ev["stage"] in events_by_req[ev["req_id"]]:
-            raise ValueError(f"line {i + 1}: duplicate stage "
-                             f"{ev['stage']!r} for request {ev['req_id']}")
-        events_by_req[ev["req_id"]][ev["stage"]] = ev["ts"]
+        events_by_req[ev["req_id"]].append(ev)
     spans = []
-    edges = [("ingest_enqueue", "submit", "ingest.wait"),
-             ("submit", "dispatch", "sched.queue"),
-             ("dispatch", "device_ready", "device.execute"),
-             ("device_ready", "done", "finalize")]
-    for rid, stages in sorted(events_by_req.items()):
-        if "submit" not in stages:
+    for rid, evs in sorted(events_by_req.items()):
+        evs.sort(key=lambda e: e["ts"])
+        counts = collections.Counter(e["stage"] for e in evs)
+        for stage, n in counts.items():
+            if n > 1 and stage not in _REPEATABLE:
+                raise ValueError(f"request {rid}: duplicate stage "
+                                 f"{stage!r} ({n} events)")
+        if "submit" not in counts:
             raise ValueError(f"request {rid}: no submit event")
-        end_stage = "done" if "done" in stages else "failed"
-        if end_stage not in stages:
-            raise ValueError(f"request {rid}: no terminal event")
-        start = min(stages.values())
+        terminal = [s for s in _TERMINALS if s in counts]
+        if len(terminal) != 1:
+            raise ValueError(f"request {rid}: expected exactly one terminal "
+                             f"event, got {terminal or 'none'}")
+        first = {}
+        last = {}
+        for ev in evs:
+            first.setdefault(ev["stage"], ev["ts"])
+            last[ev["stage"]] = ev["ts"]
+        end_stage = terminal[0]
+        end_ts = last[end_stage]
+        start = evs[0]["ts"]
+        args = {"req_id": rid, "status": end_stage}
+        if counts.get("retrying"):
+            args["retries"] = counts["retrying"]
         spans.append({"name": "request", "ts": start * 1e6,
-                      "dur": (stages[end_stage] - start) * 1e6,
-                      "pid": 1, "tid": rid,
-                      "args": {"req_id": rid, "status": end_stage}})
-        for a, b, name in edges:
-            if a in stages and b in stages:
-                spans.append({"name": name, "ts": stages[a] * 1e6,
-                              "dur": (stages[b] - stages[a]) * 1e6,
-                              "pid": 1, "tid": rid, "args": {}})
+                      "dur": (end_ts - start) * 1e6,
+                      "pid": 1, "tid": rid, "args": args})
+
+        def emit(name, t0, t1):
+            spans.append({"name": name, "ts": t0 * 1e6,
+                          "dur": (t1 - t0) * 1e6,
+                          "pid": 1, "tid": rid, "args": {}})
+
+        if "ingest_enqueue" in first:
+            emit("ingest.wait", first["ingest_enqueue"], first["submit"])
+        emit("sched.queue", first["submit"],
+             first.get("dispatch", end_ts))
+        # device.execute per dispatch: each dispatch runs until the next
+        # lifecycle event after it (device_ready, retrying, or the end)
+        times = [(e["ts"], e["stage"]) for e in evs
+                 if e["stage"] in ("dispatch", "device_ready", "retrying")]
+        for j, (ts, stage) in enumerate(times):
+            nxt = times[j + 1][0] if j + 1 < len(times) else end_ts
+            if stage == "dispatch":
+                emit("device.execute", ts, nxt)
+            elif stage == "retrying":
+                emit("retry.backoff", ts, nxt)
+        if "device_ready" in last:
+            emit("finalize", last["device_ready"], end_ts)
     return spans
 
 
