@@ -14,8 +14,9 @@ import traceback
 from benchmarks import (batch_throughput, chaos_serve, concurrent_ingest,
                         fig6_overall, fig10_fusion, fig11_ai, fig12_ablation,
                         fig13_scaling, fig14_projection, gate_classes,
-                        roofline, serve_mixed, sharded_batch, tab3_gate_ops,
-                        tab4_vectorization, telemetry_overhead)
+                        result_modes, roofline, serve_mixed, sharded_batch,
+                        tab3_gate_ops, tab4_vectorization,
+                        telemetry_overhead)
 
 MODULES = {
     "fig6": fig6_overall,
@@ -32,6 +33,7 @@ MODULES = {
     "ingest": concurrent_ingest,
     "chaos": chaos_serve,
     "classes": gate_classes,
+    "results": result_modes,
     "sharded": sharded_batch,
     "telemetry": telemetry_overhead,
 }

@@ -55,6 +55,21 @@ def _template_library(n: int):
     ]
 
 
+# (label, ResultSpec builder) — the result-mode epilogues swept on top of
+# the statevector configs; lazy so `lint` never imports jax
+def _result_library(n: int):
+    from repro.engine import results as R
+    return [
+        ("sv", lambda: None),
+        ("shots", lambda: R.ResultSpec.sample(64, key=7)),
+        ("expect", lambda: R.ResultSpec.expectation(
+            [{0: "Z"}, {0: "X", n - 1: "Z"}])),
+        ("noisy", lambda: R.ResultSpec.noisy(
+            [R.depolarizing(0, 0.05), R.amplitude_damping(n - 1, 0.1)],
+            [{0: "Z"}], unravelings=4, key=3)),
+    ]
+
+
 def _cmd_verify_plans(args) -> int:
     from repro.analysis.verify_plan import PlanVerificationError, verify_plan
     from repro.core.target import CPU_TEST
@@ -64,25 +79,36 @@ def _cmd_verify_plans(args) -> int:
     for tname, template in _template_library(args.qubits):
         for backend in ("dense", "planar", "pallas"):
             for state_bits in (0, 1, 2):
-                cfg = (f"{tname}/n={template.n}/{backend}/"
-                       f"mesh={1 << state_bits}dev")
-                try:
-                    plan = compile_plan(template, backend=backend,
-                                        target=CPU_TEST, interpret=True,
-                                        state_bits=state_bits)
-                    # semantic round-trip runs the single-device program
-                    # (sharded plans share the item list, so their lowering
-                    # is validated by the same oracle comparison)
-                    verify_plan(plan, semantic=args.semantic)
-                except PlanVerificationError as e:
-                    print(f"FAIL {cfg}: {e}", file=sys.stderr)
-                    return 1
-                checked += 1
-                if args.verbose:
-                    cc = plan.class_counts()
-                    print(f"ok {cfg}: {len(plan.items)} items "
-                          f"(diag={cc['diagonal']} perm={cc['permutation']} "
-                          f"dense={cc['general']})")
+                # result-mode dispatch is single-device; sweep the epilogue
+                # kinds on the unsharded configs only
+                rlib = (_result_library(template.n) if state_bits == 0
+                        else [("sv", lambda: None)])
+                for rname, make_spec in rlib:
+                    cfg = (f"{tname}/n={template.n}/{backend}/"
+                           f"mesh={1 << state_bits}dev/{rname}")
+                    try:
+                        plan = compile_plan(template, backend=backend,
+                                            target=CPU_TEST, interpret=True,
+                                            state_bits=state_bits,
+                                            result=make_spec())
+                        # semantic round-trip runs the single-device program
+                        # (sharded plans share the item list, so their
+                        # lowering is validated by the same oracle
+                        # comparison; result-mode plans round-trip their
+                        # gate prefix)
+                        verify_plan(plan, semantic=args.semantic)
+                    except PlanVerificationError as e:
+                        print(f"FAIL {cfg}: {e}", file=sys.stderr)
+                        return 1
+                    checked += 1
+                    if args.verbose:
+                        cc = plan.class_counts()
+                        print(f"ok {cfg}: {len(plan.items)} items "
+                              f"(diag={cc['diagonal']} "
+                              f"perm={cc['permutation']} "
+                              f"dense={cc['general']} "
+                              f"channel={cc['channel']} "
+                              f"result={cc['result']})")
     print(f"verify-plans: {checked} plan configs verified"
           f"{' (semantic)' if args.semantic else ''}")
     return 0

@@ -38,7 +38,7 @@ _SEMANTIC_SEED = 1234   # fixed: verification must be reproducible
 #: Invariant code -> description.  Codes are stable (docs/ANALYSIS.md holds
 #: the authoritative table; tests assert every code here is documented).
 INVARIANTS = {
-    "kind": "item kind must be one of dense | diag | perm",
+    "kind": "item kind must be one of dense | diag | perm | channel | result",
     "span-bounds": "qubits and controls lie in [0, n) with no overlap "
                    "between the two",
     "span-sorted": "diag/perm spans are strictly increasing (sorted, "
@@ -68,6 +68,19 @@ INVARIANTS = {
              "recomputation from the item list",
     "semantic": "the compiled program round-trips against the dense "
                 "gate-by-gate oracle on a fixed random binding",
+    "channel-kraus": "channel items carry >=1 complex Kraus operator of "
+                     "shape (2**w, 2**w) satisfying trace preservation "
+                     "sum_i K_i^dag K_i = I within tolerance; kraus arrays "
+                     "appear only on channel items",
+    "epilogue-terminal": "a result-mode plan ends in exactly one result "
+                         "item, placed after every gate and channel item; "
+                         "plans without a ResultSpec carry no channel or "
+                         "result items",
+    "result-key": "the terminal result item holds the plan's ResultSpec "
+                  "with a serving mode the executor knows, a uint32-range "
+                  "PRNG key for modes that draw randomness, and per-mode "
+                  "payload (shots > 0 / observables present / channel items "
+                  "matching spec.channels)",
 }
 
 
@@ -116,6 +129,10 @@ def _check_width(item: PlanItem, idx: int, plan: CompiledPlan,
                  diag_budget: int) -> None:
     w = len(item.qubits)
     n = plan.n
+    if item.kind in ("channel", "result"):
+        # channels apply through the general planar/dense application (no
+        # tiled kernel behind them); the result epilogue touches no qubits
+        return
     if item.kind == "dense":
         if plan.f and w > plan.f:
             _fail("width-dense", f"width {w} > fused budget f={plan.f}",
@@ -227,14 +244,119 @@ def _check_factors(item: PlanItem, idx: int, num_params: int) -> None:
                   idx, item.kind)
 
 
+_KRAUS_ATOL = 1e-4      # complex64 sum K^dag K completeness tolerance
+
+
+def _check_channel(item: PlanItem, idx: int) -> None:
+    if item.kind != "channel":
+        if item.kraus:
+            _fail("channel-kraus", "non-channel item carries Kraus operators",
+                  idx, item.kind)
+        return
+    size = 1 << len(item.qubits)
+    if not item.kraus:
+        _fail("channel-kraus", "channel item without Kraus operators",
+              idx, item.kind)
+    acc = np.zeros((size, size), np.complex128)
+    for k, K in enumerate(item.kraus):
+        K = np.asarray(K)
+        if K.shape != (size, size) or not np.issubdtype(K.dtype,
+                                                        np.complexfloating):
+            _fail("channel-kraus",
+                  f"Kraus[{k}] shape {K.shape} dtype {K.dtype} != "
+                  f"complex[{size}, {size}]", idx, item.kind)
+        acc += K.conj().T @ K
+    dev = float(np.abs(acc - np.eye(size)).max())
+    if dev > _KRAUS_ATOL:
+        _fail("channel-kraus",
+              f"sum K^dag K deviates from identity by {dev:.2e} "
+              f"(tol {_KRAUS_ATOL}) — channel is not trace-preserving",
+              idx, item.kind)
+
+
+def _check_result_structure(plan: CompiledPlan) -> None:
+    """Epilogue placement + ResultSpec payload checks for result-mode plans.
+
+    ``plan.run`` / ``run_batch_raw`` execute only the gate-item prefix, so
+    everything the result program relies on — channels between gates and
+    epilogue, the epilogue itself terminal and unique, the spec coherent —
+    is invisible to the statevector paths and must be checked here.
+    """
+    from repro.engine import results as R
+    result_idx = [i for i, it in enumerate(plan.items)
+                  if it.kind == "result"]
+    channel_idx = [i for i, it in enumerate(plan.items)
+                   if it.kind == "channel"]
+    gate_idx = [i for i, it in enumerate(plan.items)
+                if it.kind in ("dense", "diag", "perm")]
+    if plan.result is None:
+        if result_idx or channel_idx:
+            _fail("epilogue-terminal",
+                  f"plan without a ResultSpec carries channel items "
+                  f"{channel_idx} / result items {result_idx}")
+        return
+    if len(result_idx) != 1 or result_idx[0] != len(plan.items) - 1:
+        _fail("epilogue-terminal",
+              f"result items at {result_idx} in a {len(plan.items)}-item "
+              "plan (need exactly one, in terminal position)")
+    last_gate = max(gate_idx) if gate_idx else -1
+    if any(c < last_gate for c in channel_idx):
+        _fail("epilogue-terminal",
+              f"channel items {channel_idx} interleave the gate prefix "
+              f"(last gate at {last_gate}) — channels apply post-circuit")
+    spec = plan.items[result_idx[0]].result
+    if spec is not plan.result:
+        _fail("result-key",
+              "terminal result item does not hold the plan's ResultSpec")
+    if spec.mode not in R.MODES:
+        _fail("result-key", f"unknown serving mode {spec.mode!r}",
+              result_idx[0], "result")
+    if spec.needs_key and not (0 <= int(spec.key) < 1 << 32):
+        _fail("result-key",
+              f"PRNG key {spec.key} outside uint32 range for mode "
+              f"{spec.mode!r}", result_idx[0], "result")
+    if spec.mode == R.MODE_SHOTS and spec.shots <= 0:
+        _fail("result-key", f"shots mode with shots={spec.shots}",
+              result_idx[0], "result")
+    if spec.mode in (R.MODE_EXPECTATION, R.MODE_NOISY):
+        if not spec.observables:
+            _fail("result-key",
+                  f"mode {spec.mode!r} without observables",
+                  result_idx[0], "result")
+        for obs in spec.observables:
+            for q, p in obs:
+                if not (0 <= q < plan.n) or p not in ("X", "Y", "Z"):
+                    _fail("result-key",
+                          f"observable term ({q}, {p!r}) invalid for "
+                          f"n={plan.n}", result_idx[0], "result")
+    if spec.mode == R.MODE_NOISY and len(channel_idx) != len(spec.channels):
+        _fail("result-key",
+              f"{len(channel_idx)} channel items vs {len(spec.channels)} "
+              "channels in the ResultSpec", result_idx[0], "result")
+    if spec.mode != R.MODE_NOISY and channel_idx:
+        _fail("epilogue-terminal",
+              f"channel items {channel_idx} in non-noisy mode "
+              f"{spec.mode!r}")
+
+
 def _check_accounting(plan: CompiledPlan) -> None:
     """Double-entry bookkeeping: recompute the per-class stats independently
     and compare with what the plan reports."""
-    counts = {"diagonal": 0, "permutation": 0, "general": 0}
+    counts = {"diagonal": 0, "permutation": 0, "general": 0,
+              "channel": 0, "result": 0}
     generic = actual = 0.0
     for item in plan.items:
-        counts[{"diag": "diagonal", "perm": "permutation"}.get(
+        counts[{"diag": "diagonal", "perm": "permutation",
+                "channel": "channel", "result": "result"}.get(
             item.kind, "general")] += 1
+        if item.kind == "result":
+            continue
+        if item.kind == "channel":
+            g = (item.generic_flops if item.generic_flops is not None
+                 else 8.0 * (1 << len(item.qubits)) * len(item.kraus))
+            generic += g
+            actual += g
+            continue
         dense = 8.0 * (1 << len(item.qubits)) / (1 << len(item.controls))
         generic += (item.generic_flops
                     if item.generic_flops is not None else dense)
@@ -258,7 +380,12 @@ def _check_accounting(plan: CompiledPlan) -> None:
 def _check_semantic(plan: CompiledPlan) -> None:
     """Round-trip the compiled program against the dense oracle on one
     fixed random binding (the single-device program path — sharded plans
-    share the same item list, so this validates their lowering too)."""
+    share the same item list, so this validates their lowering too).
+
+    For result-mode plans ``plan.run`` executes the gate-item prefix only,
+    so this checks the ideal-circuit lowering; the stochastic channel /
+    epilogue tail is covered structurally by :func:`_check_result_structure`
+    and statistically by the result-mode test suite."""
     import jax.numpy as jnp
     from repro.core import statevec as SV
     rng = np.random.default_rng(_SEMANTIC_SEED)
@@ -289,13 +416,15 @@ def verify_plan(plan: CompiledPlan, *, semantic: bool = False) -> CompiledPlan:
                                   state_bits=plan.state_bits)
                    if plan.f else row_budget(n, plan.target))
     for idx, item in enumerate(plan.items):
-        if item.kind not in ("dense", "diag", "perm"):
+        if item.kind not in ("dense", "diag", "perm", "channel", "result"):
             _fail("kind", f"unknown kind {item.kind!r}", idx, item.kind)
         _check_span(item, idx, n)
         _check_width(item, idx, plan, diag_budget)
         _check_perm(item, idx)
         _check_phases(item, idx, plan.num_params)
         _check_factors(item, idx, plan.num_params)
+        _check_channel(item, idx)
+    _check_result_structure(plan)
     _check_accounting(plan)
     if semantic:
         _check_semantic(plan)

@@ -32,13 +32,26 @@ def probabilities(state: State) -> jax.Array:
     return d[0] * d[0] + d[1] * d[1]
 
 
+def sample_probs(probs: jax.Array, n_samples: int,
+                 key: jax.Array) -> jax.Array:
+    """Inverse-CDF sampling from a probability vector (int32 [n_samples]).
+
+    Hardened against the two float edges of searchsorted sampling: the
+    CDF is renormalized with a tiny-denominator guard (an unnormalized
+    or near-zero-mass vector never divides by ~0), and the drawn index
+    is clamped to the last basis state (a draw landing past ``cdf[-1]``
+    through float round-off can never index out of range).
+    """
+    cdf = jnp.cumsum(probs)
+    cdf = cdf / jnp.maximum(cdf[-1], jnp.finfo(cdf.dtype).tiny)
+    u = jax.random.uniform(key, (n_samples,))
+    idx = jnp.searchsorted(cdf, u)
+    return jnp.minimum(idx, probs.shape[0] - 1).astype(jnp.int32)
+
+
 def sample(state: State, n_samples: int, key: jax.Array) -> jax.Array:
     """Draw basis-state indices ~ |amp|^2 (int32 [n_samples])."""
-    probs = probabilities(state)
-    cdf = jnp.cumsum(probs)
-    cdf = cdf / cdf[-1]
-    u = jax.random.uniform(key, (n_samples,))
-    return jnp.searchsorted(cdf, u).astype(jnp.int32)
+    return sample_probs(probabilities(state), n_samples, key)
 
 
 def expectation_pauli(state: State, paulis: Mapping[int, str]) -> jax.Array:

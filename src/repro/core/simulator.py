@@ -143,5 +143,18 @@ class Simulator:
         return ME.sample(state, n_samples, key)
 
     def expectation_pauli(self, state: SV.State, paulis) -> jax.Array:
+        """<P> for a Pauli string ``{qubit: 'X'|'Y'|'Z'}``.
+
+        The single-qubit-Z case on the pallas backend routes through the
+        streaming expectation kernel (one pass over the state, no
+        apply-then-inner-product round trip); everything else takes the
+        planar reduction in ``repro.core.measure``.
+        """
         from repro.core import measure as ME
+        items = list(paulis.items())
+        if (self.backend == "pallas" and len(items) == 1
+                and str(items[0][1]).upper() == "Z"):
+            from repro.kernels.expectation import ops as E
+            return E.expectation_z(state.data, state.n, state.v, items[0][0],
+                                   interpret=self.interpret)
         return ME.expectation_pauli(state, paulis)

@@ -18,6 +18,10 @@ from repro.engine.telemetry import (  # noqa: F401
     Span, SpanTracer, VectorizationProfile, engine_registry,
     vectorization_profile,
 )
+from repro.engine.results import (  # noqa: F401
+    MODE_EXPECTATION, MODE_NOISY, MODE_SHOTS, MODE_STATEVECTOR, NoiseChannel,
+    ResultSpec, amplitude_damping, bit_flip, depolarizing, phase_flip,
+)
 from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
     BatchScheduler, InFlightBatch, Request, RequestState, SchedulerStats,

@@ -100,7 +100,8 @@ class BatchExecutor:
             return mesh
 
     # -- plan resolution ------------------------------------------------------
-    def plan_for(self, template: CircuitTemplate | Circuit) -> CompiledPlan:
+    def plan_for(self, template: CircuitTemplate | Circuit,
+                 result=None) -> CompiledPlan:
         if isinstance(template, Circuit):
             template = template_of(template)
         spec = self.shard_spec_for(template.n, 1)
@@ -112,7 +113,7 @@ class BatchExecutor:
             key = self.cache.plan_key(
                 template, backend=self.backend, target=self.target, f=self.f,
                 fuse=self.fuse, interpret=self.interpret,
-                specialize=True, state_bits=spec.state_bits)
+                specialize=True, state_bits=spec.state_bits, result=result)
             if self.breaker.is_open(key):
                 specialize = False
                 self.breaker.record_fallback()
@@ -120,20 +121,25 @@ class BatchExecutor:
             template, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
             specialize=specialize, state_bits=spec.state_bits,
-            verify=self.verify, injector=self.injector)
+            result=result, verify=self.verify, injector=self.injector)
 
-    def plan_key(self, template: CircuitTemplate | Circuit) -> tuple:
+    def plan_key(self, template: CircuitTemplate | Circuit,
+                 result=None) -> tuple:
         """The cache key :meth:`plan_for` resolves ``template`` to — the
         grouping key schedulers batch requests by.  Mesh-shape-aware: a
         structure that state-shards is a different plan (batch-only
-        sharding reuses the single-device lowering by design)."""
+        sharding reuses the single-device lowering by design).  A
+        result spec contributes its *structural* component only, so
+        requests differing just in PRNG key or unraveling count still
+        co-batch (see :meth:`ResultSpec.plan_key`)."""
         if isinstance(template, Circuit):
             template = template_of(template)
         spec = self.shard_spec_for(template.n, 1)
         return self.cache.plan_key(
             template, backend=self.backend, target=self.target, f=self.f,
             fuse=self.fuse, interpret=self.interpret,
-            specialize=self.specialize, state_bits=spec.state_bits)
+            specialize=self.specialize, state_bits=spec.state_bits,
+            result=result)
 
     # -- execution ------------------------------------------------------------
     def run(self, template: CircuitTemplate | Circuit, params=None,
@@ -166,6 +172,7 @@ class BatchExecutor:
 
     def dispatch_batch(self, template: CircuitTemplate | Circuit,
                        params_matrix, initial: SV.State | None = None,
+                       result=None, rowkeys=None,
                        ) -> tuple[CompiledPlan, jax.Array]:
         """Non-blocking launch: resolve the plan and dispatch the batched
         program, returning the *unwaited* stacked device output.
@@ -175,11 +182,16 @@ class BatchExecutor:
         :meth:`finalize_batch` (or ``jax.block_until_ready`` + ``wrap_batch``).
         With a mesh configured the dispatch shards the batch (and, when the
         spill policy says so, the state rows) over the devices.
+
+        ``result`` (a :class:`~repro.engine.results.ResultSpec`) dispatches
+        the result-mode program instead; ``rowkeys`` is the matching
+        ``uint32[B, 2]`` of per-row (request key, trajectory index) pairs —
+        all-zeros when omitted.
         """
         params_matrix = np.atleast_2d(np.asarray(params_matrix, np.float32))
         if isinstance(template, Circuit):
             template = template_of(template)
-        plan = self.plan_for(template)
+        plan = self.plan_for(template, result=result)
         if self.injector is not None:
             # fires *before* the activity accounting: a faulted dispatch
             # never counts as served rows
@@ -188,6 +200,16 @@ class BatchExecutor:
         # asked to run.  Recorded *before* the launch so the accounting never
         # sits between enqueue and the caller's first readiness check
         self.activity.record(plan, params_matrix.shape[0])
+        if plan.result is not None:
+            if self._device_pool is not None and not self.shard_spec_for(
+                    template.n, params_matrix.shape[0]).is_single:
+                raise ValueError(
+                    "result-mode dispatch is single-device for now; "
+                    "state-sharded meshes serve statevector mode only")
+            if rowkeys is None:
+                rowkeys = np.zeros((params_matrix.shape[0], 2), np.uint32)
+            return plan, plan.run_batch_result_raw(params_matrix, rowkeys,
+                                                   initial=initial)
         if self._device_pool is None:
             return plan, plan.run_batch_raw(params_matrix, initial=initial)
         if initial is not None:

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.circuits import Circuit
 from repro.engine.batch import BatchExecutor
+from repro.engine.results import ResultSpec
 from repro.engine.scheduler import (BatchScheduler, Request, validate_params,
                                     validate_sweep)
 from repro.engine.telemetry import STAGE_ENQUEUE
@@ -81,7 +82,7 @@ class IngestHandle:
     """
 
     __slots__ = ("seq", "template", "params", "request", "enqueue_ts",
-                 "deadline_at", "_future")
+                 "deadline_at", "result_spec", "_future")
 
     def __init__(self, seq: int, template: CircuitTemplate,
                  params: np.ndarray):
@@ -91,6 +92,7 @@ class IngestHandle:
         self.request: Request | None = None   # set by the drain loop
         self.enqueue_ts: float | None = None  # lane-append stamp (traced runs)
         self.deadline_at: float | None = None  # absolute deadline (clock units)
+        self.result_spec: ResultSpec | None = None  # None = statevector mode
         self._future: concurrent.futures.Future = concurrent.futures.Future()
 
     def done(self) -> bool:
@@ -314,7 +316,8 @@ class IngestServer:
     def submit(self, template: CircuitTemplate | Circuit,
                params: Sequence[float] | None = None, *,
                timeout: float | None = None,
-               deadline_ms: float | None = None) -> IngestHandle:
+               deadline_ms: float | None = None,
+               result: ResultSpec | None = None) -> IngestHandle:
         """Enqueue one request from any thread; returns immediately with a
         future-like handle (modulo backpressure under the block policy).
 
@@ -322,9 +325,19 @@ class IngestServer:
         (producer-side, so lane wait burns budget too): a request still
         undispatched when it elapses is shed with a terminal
         :class:`~repro.engine.resilience.DeadlineExceeded` instead of
-        wasting a dispatch."""
+        wasting a dispatch.
+
+        ``result`` selects the result mode
+        (:class:`~repro.engine.results.ResultSpec`): ``handle.result()``
+        then resolves to int32 shot samples or f32 expectation values
+        instead of a state.  Validated here so a bad spec (wrong type,
+        out-of-range observable qubit) raises in the submitting thread,
+        mirroring the ``validate_params`` contract."""
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if result is not None and not isinstance(result, ResultSpec):
+            raise TypeError(f"result must be a ResultSpec, "
+                            f"got {type(result).__name__}")
         # lint-ok: EL001 unlocked fast-path check only; the authoritative
         # closed-vs-accepted decision is re-made under _mutex below, after
         # backpressure — this read just fails producers early without
@@ -334,6 +347,8 @@ class IngestServer:
         # shared with BatchScheduler.submit, so shape errors surface in the
         # submitting thread and the two entry points can never drift
         template, p = validate_params(template, params)
+        if result is not None:
+            result.validate_for(template)
         blocking = self.policy == BLOCK
         if not self._slots.acquire(blocking=blocking,
                                    timeout=timeout if blocking else None):
@@ -345,6 +360,8 @@ class IngestServer:
             raise IngestRejected(f"pending window full ({self.max_pending}); "
                                  f"policy={self.policy!r}")
         handle = IngestHandle(next(self._seq), template, p)
+        if result is not None:
+            handle.result_spec = result
         if deadline_ms is not None:
             handle.deadline_at = self.scheduler.clock() + deadline_ms / 1e3
         if self.tracer.enabled:
@@ -373,14 +390,17 @@ class IngestServer:
         return handle
 
     def submit_sweep(self, template: CircuitTemplate, params_matrix, *,
-                     timeout: float | None = None) -> list[IngestHandle]:
+                     timeout: float | None = None,
+                     result: ResultSpec | None = None) -> list[IngestHandle]:
         """Submit one request per row of a ``[B, P]`` parameter matrix
-        (1-D rows follow :meth:`BatchScheduler.submit_sweep` semantics)."""
+        (1-D rows follow :meth:`BatchScheduler.submit_sweep` semantics);
+        ``result`` applies the same result mode to every row."""
         arr = validate_sweep(template, params_matrix)
         handles: list[IngestHandle] = []
         try:
             for row in arr:
-                handles.append(self.submit(template, row, timeout=timeout))
+                handles.append(self.submit(template, row, timeout=timeout,
+                                           result=result))
         except Exception as e:
             # rows already accepted are live and will execute: hand their
             # handles to the caller on the exception so a partial sweep can
@@ -391,17 +411,19 @@ class IngestServer:
 
     async def submit_async(self, template: CircuitTemplate | Circuit,
                            params: Sequence[float] | None = None,
+                           result: ResultSpec | None = None,
                            ) -> IngestHandle:
         """Asyncio-native submit: never blocks the event loop, even when
         the block policy has to wait for a pending slot."""
         loop = asyncio.get_running_loop()
         return await loop.run_in_executor(
-            None, lambda: self.submit(template, params))
+            None, lambda: self.submit(template, params, result=result))
 
     async def run_async(self, template: CircuitTemplate | Circuit,
-                        params: Sequence[float] | None = None):
-        """Submit and await the resulting state in one call."""
-        handle = await self.submit_async(template, params)
+                        params: Sequence[float] | None = None,
+                        result: ResultSpec | None = None):
+        """Submit and await the resulting payload in one call."""
+        handle = await self.submit_async(template, params, result=result)
         return await handle
 
     # -- drain loop (single background thread, or step() from tests) ----------
@@ -458,7 +480,8 @@ class IngestServer:
                 self._live[h.seq] = h
             for h in collected:
                 h.request = self.scheduler.submit(h.template, h.params,
-                                                  deadline_at=h.deadline_at)
+                                                  deadline_at=h.deadline_at,
+                                                  result=h.result_spec)
                 if self.tracer.enabled and h.enqueue_ts is not None:
                     self.tracer.record(h.request.req_id, STAGE_ENQUEUE,
                                        h.enqueue_ts, seq=h.seq)

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import apply as A
 from repro.core import distributed as D
+from repro.core import measure as ME
 from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.core.fusion import choose_f, cluster_gates, realize_cluster
@@ -64,6 +65,12 @@ PARAM_OP_CLASS = {"rz": "diagonal", "phase": "diagonal",
 # coefficient vector, so a binding costs one axpy per rotation plus a single
 # cos/sin — no matrix construction, no gathers from traced arrays.
 DIAG_PARAM_COEFF = {"rz": (-0.5, 0.5), "phase": (0.0, 1.0)}
+
+# Distinct fold-in salts for the result-mode program's PRNG streams: one
+# base key per row (request key + trajectory index) splits into independent
+# channel-trajectory and shot-sampling streams.
+_CHANNEL_SALT = 0x00C0FFEE  # + channel index
+_SHOT_SALT = 0x5A17
 
 
 @functools.lru_cache(maxsize=4096)
@@ -186,15 +193,25 @@ class PlanItem:
       folded into the phase vector, so ``controls`` is empty.
     * ``"perm"``  — static index-map gather ``perm`` over the cluster space,
       optionally followed by the phase rotation (monomial clusters).
+    * ``"channel"`` — one Kraus noise channel, executed by stochastic
+      trajectory unraveling: every operator in ``kraus`` is applied, one
+      branch is sampled ~ its norm from the row's PRNG key, and the
+      survivor is renormalized (result-mode plans only).
+    * ``"result"`` — the terminal epilogue item carrying the
+      :class:`~repro.engine.results.ResultSpec`: shot sampling or the
+      observable reduction fused after the last gate, so non-statevector
+      payloads never store the state back (paper §IV).
     """
 
     qubits: tuple[int, ...]
     controls: tuple[int, ...]
     factors: tuple = ()             # ("const", ndarray) | ("param", op, maps)
-    kind: str = "dense"             # dense | diag | perm
+    kind: str = "dense"             # dense | diag | perm | channel | result
     perm: np.ndarray | None = None  # int32[2**w], kind == "perm" only
     phases: tuple = ()              # ("const", vec) | ("param", op, coeff)
     generic_flops: float | None = None  # flops/amp of the dense alternative
+    kraus: tuple = ()               # complex64 operators, kind == "channel"
+    result: object = None           # ResultSpec, kind == "result" only
 
     @property
     def is_constant(self) -> bool:
@@ -764,6 +781,9 @@ class CompiledPlan:
     items: list[PlanItem]
     specialize: bool = True
     state_bits: int = 0              # state-sharding degree the plan targets
+    # non-None for result-mode plans: the spec the terminal "result" item
+    # carries, duplicated here so execution paths never walk the item list
+    result: "object | None" = None
     compile_seconds: float = 0.0
     # static vectorization profile (ALO/ORR/AI/fast-path coverage), computed
     # once by compile_plan via repro.engine.telemetry.vectorization_profile
@@ -800,9 +820,11 @@ class CompiledPlan:
     def class_counts(self) -> dict:
         """Fused-gate counts by lowering class (diag/perm items are the
         matmul-free fast paths; dense items take the generic matvec)."""
-        counts = {"diagonal": 0, "permutation": 0, "general": 0}
+        counts = {"diagonal": 0, "permutation": 0, "general": 0,
+                  "channel": 0, "result": 0}
         for item in self.items:
-            counts[{"diag": "diagonal", "perm": "permutation"}.get(
+            counts[{"diag": "diagonal", "perm": "permutation",
+                    "channel": "channel", "result": "result"}.get(
                 item.kind, "general")] += 1
         return counts
 
@@ -813,6 +835,16 @@ class CompiledPlan:
         their control-satisfied ``2**-c`` amplitude fraction)."""
         generic = actual = 0.0
         for item in self.items:
+            if item.kind == "result":
+                continue          # reduction epilogue, not a gate lowering
+            if item.kind == "channel":
+                # every Kraus branch pays a dense matvec; there is no
+                # cheaper generic alternative to compare against
+                g = item.generic_flops if item.generic_flops is not None \
+                    else 8.0 * (1 << len(item.qubits)) * len(item.kraus)
+                generic += g
+                actual += g
+                continue
             dense = (8.0 * (1 << len(item.qubits))
                      / (1 << len(item.controls)))
             g = item.generic_flops if item.generic_flops is not None else dense
@@ -894,10 +926,22 @@ class CompiledPlan:
                                       perm=perm, interpret=interpret)
         return step
 
+    def _gate_items(self) -> list[PlanItem]:
+        """The circuit part of the item list (channel/result items are
+        executed only by the result-mode program paths)."""
+        return [it for it in self.items if it.kind in ("dense", "diag",
+                                                       "perm")]
+
     def _program(self):
+        """The ideal-circuit program ``(state, params) -> state``.
+
+        For a result-mode plan this covers the gate items only — the
+        channel/epilogue items need per-row PRNG keys and run through
+        :meth:`_result_program` instead.
+        """
         if self.backend not in ("dense", "planar", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}")
-        steps = [self._step(item) for item in self.items]
+        steps = [self._step(item) for item in self._gate_items()]
 
         def program(state, params):
             for step in steps:
@@ -1021,6 +1065,189 @@ class CompiledPlan:
             else:
                 def seq(d0, ps):
                     return jax.lax.map(lambda p: program(d0, p), ps)
+            return jax.jit(seq)
+
+    # -- result-mode execution ------------------------------------------------
+    def _row_probs(self, data) -> jax.Array:
+        """|amp|^2 in dense basis order, from this backend's layout."""
+        if self.backend == "dense":
+            re, im = jnp.real(data), jnp.imag(data)
+            return re * re + im * im
+        flat = data.reshape(2, -1)
+        return flat[0] * flat[0] + flat[1] * flat[1]
+
+    def _channel_step(self, item: PlanItem):
+        """Trajectory-unraveling step ``(state, key) -> state``.
+
+        Applies every Kraus branch, draws one ~ its squared norm
+        (``jax.random.categorical``), and renormalizes the survivor —
+        the standard quantum-trajectories scheme, unbiased for any
+        observable: E[<P>] = tr(P sum_i K_i rho K_i^dagger) exactly.
+        """
+        n, qubits = self.n, item.qubits
+        mats = [np.asarray(k, np.complex64) for k in item.kraus]
+        tiny = float(np.finfo(np.float32).tiny)
+
+        def pick(branches, norms, key):
+            total = jnp.sum(norms)
+            p = norms / jnp.maximum(total, tiny)
+            idx = jax.random.categorical(key, jnp.log(jnp.maximum(p, 1e-30)))
+            chosen = jnp.take(branches, idx, axis=0)
+            return chosen / jnp.sqrt(jnp.maximum(norms[idx], tiny))
+
+        if self.backend == "dense":
+            us = [jnp.asarray(m) for m in mats]
+
+            def step(psi, key):
+                branches = jnp.stack([A.apply_gate_dense(psi, n, qubits, u)
+                                      for u in us])
+                re, im = jnp.real(branches), jnp.imag(branches)
+                norms = jnp.sum(re * re + im * im, axis=1)
+                return pick(branches, norms, key)
+            return step
+
+        # planar and pallas share the lane-tiled layout; Kraus branches are
+        # applied through the planar path (the operators are non-unitary, so
+        # the mid-level reference contract is exactly what we need)
+        planes = [(jnp.asarray(m.real, jnp.float32),
+                   jnp.asarray(m.imag, jnp.float32)) for m in mats]
+
+        def step(data, key):
+            branches = jnp.stack([A.apply_gate_planar(data, n, qubits,
+                                                      ur, ui)
+                                  for ur, ui in planes])
+            flat = branches.reshape(len(planes), -1)
+            norms = jnp.sum(flat * flat, axis=1)
+            return pick(branches, norms, key)
+        return step
+
+    def _observable_step(self, obs: tuple):
+        """Reduction ``(state) -> f32`` for one canonical Pauli string.
+
+        pallas routes the single-qubit-Z case through the streaming
+        expectation kernel (the paper's §IV reduction); everything else
+        takes the planar/dense apply-then-inner-product fallback.
+        """
+        n = self.n
+        if (self.backend == "pallas" and len(obs) == 1 and obs[0][1] == "Z"):
+            from repro.kernels.expectation import ops as EXP
+            qubit = obs[0][0]
+            v = self.target.lane_qubits
+            interpret = self.interpret
+
+            def step(data):
+                return EXP.expectation_z(data, n, v, qubit,
+                                         interpret=interpret)
+            return step
+        if self.backend == "dense":
+            us = [(q, jnp.asarray(np.asarray(ME._PAULI[p], np.complex64)))
+                  for q, p in obs]
+
+            def step(psi):
+                phi = psi
+                for q, u in us:
+                    phi = A.apply_gate_dense(phi, n, (q,), u)
+                return jnp.real(jnp.vdot(psi, phi)).astype(jnp.float32)
+            return step
+        planes = [(q, jnp.asarray(np.real(ME._PAULI[p]).astype(np.float32)),
+                   jnp.asarray(np.imag(ME._PAULI[p]).astype(np.float32)))
+                  for q, p in obs]
+
+        def step(data):
+            pd = data
+            for q, ur, ui in planes:
+                pd = A.apply_gate_planar(pd, n, (q,), ur, ui)
+            a = data.reshape(2, -1)
+            b = pd.reshape(2, -1)
+            return jnp.sum(a[0] * b[0] + a[1] * b[1])
+        return step
+
+    def _epilogue_step(self, spec):
+        """Fused result epilogue ``(state, key) -> payload``."""
+        from repro.engine import results as R
+        if spec.mode == R.MODE_SHOTS:
+            shots = spec.shots
+
+            def epi(data, key):
+                return ME.sample_probs(self._row_probs(data), shots,
+                                       jax.random.fold_in(key, _SHOT_SALT))
+            return epi
+        # expectation / noisy: one reduction per observable, stacked
+        steps = [self._observable_step(obs) for obs in spec.observables]
+
+        def epi(data, key):
+            return jnp.stack([s(data) for s in steps]).astype(jnp.float32)
+        return epi
+
+    def _result_program(self):
+        """The full result-mode program ``(state, params, rowkey) -> payload``.
+
+        ``rowkey`` is ``uint32[2]`` = (per-request PRNG seed, trajectory
+        index): randomness derives only from the request's own key fold-in,
+        never from batch position — which is what makes shot payloads
+        bitwise reproducible regardless of batch composition.
+        """
+        spec = self.result
+        if spec is None:
+            raise ValueError(f"{self.template.name}: plan has no result "
+                             f"spec; use run/run_batch_raw")
+        steps = [self._step(it) for it in self._gate_items()]
+        chans = [self._channel_step(it) for it in self.items
+                 if it.kind == "channel"]
+        epi = self._epilogue_step(spec)
+
+        def program(state, params, rowkey):
+            for step in steps:
+                state = step(state, params)
+            key = jax.random.fold_in(jax.random.PRNGKey(rowkey[0]),
+                                     rowkey[1])
+            for i, ch in enumerate(chans):
+                state = ch(state, jax.random.fold_in(key, _CHANNEL_SALT + i))
+            return epi(state, key)
+        return program
+
+    def run_result(self, params=None, rowkey=(0, 0),
+                   initial: SV.State | None = None) -> jax.Array:
+        """Execute one row of a result-mode plan (shots: int32[k];
+        expectation/noisy: f32[num_observables] for one trajectory)."""
+        rk = jnp.asarray(np.asarray(rowkey, np.uint32).reshape(2))
+        data0 = self._initial_data(initial)
+        with self._plock:
+            fn = self._get_or_build(("result", 1),
+                                    lambda: jax.jit(self._result_program()))
+        return fn(data0, self._params_array(params), rk)
+
+    def run_batch_result_raw(self, params_matrix, rowkeys,
+                             initial: SV.State | None = None) -> jax.Array:
+        """vmap the result program over [B, P] params + [B, 2] rowkeys;
+        returns the stacked payloads with a leading batch axis."""
+        pm = jnp.asarray(params_matrix, jnp.float32)
+        if pm.ndim != 2 or pm.shape[1] != self.num_params:
+            raise ValueError(f"{self.template.name}: params matrix must be "
+                             f"[B, {self.num_params}], got {tuple(pm.shape)}")
+        rk = jnp.asarray(np.asarray(rowkeys, np.uint32))
+        if rk.shape != (pm.shape[0], 2):
+            raise ValueError(f"{self.template.name}: rowkeys must be "
+                             f"[{pm.shape[0]}, 2], got {tuple(rk.shape)}")
+        data0 = self._initial_data(initial)
+        key = ("result", int(pm.shape[0]))
+        with self._plock:
+            fn = self._get_or_build(key, lambda: self._build_batched_result(
+                data0, pm, rk))
+        return fn(data0, pm, rk)
+
+    def _build_batched_result(self, data0, pm, rk):
+        program = self._result_program()
+        vmapped = jax.vmap(program, in_axes=(None, 0, 0))
+        try:
+            jax.eval_shape(vmapped, data0, pm, rk)
+            return jax.jit(vmapped)
+        except Exception:
+            # same fallback as _build_batched: no batching rule (pallas
+            # epilogue kernels in some modes) -> sequential scan in one jit
+            def seq(d0, ps, ks):
+                return jax.lax.map(lambda pk: program(d0, pk[0], pk[1]),
+                                   (ps, ks))
             return jax.jit(seq)
 
     # -- sharded execution ----------------------------------------------------
@@ -1233,7 +1460,7 @@ def resolve_diag_f(f_eff: int, target: Target, n: int,
 def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None = None, fuse: bool = True,
                  interpret: bool = True, specialize: bool = True,
-                 state_bits: int = 0, verify: bool = False,
+                 state_bits: int = 0, result=None, verify: bool = False,
                  clock: Callable[[], float] = time.perf_counter,
                  ) -> CompiledPlan:
     """Cluster once, lower once: build the fused program for one structure.
@@ -1248,6 +1475,14 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
     ``2**state_bits`` devices (:meth:`CompiledPlan.run_sharded_batch_raw`):
     item widths are capped by the *local* sub-state's row budget, which is
     why plans for different mesh shapes are distinct cache entries.
+
+    ``result`` (a :class:`~repro.engine.results.ResultSpec`) compiles a
+    *result-mode* plan: noise channels lower to ``"channel"`` items after
+    the gate items, and a terminal ``"result"`` item carries the fused
+    epilogue (shot sampling / observable reduction) — executed through
+    :meth:`CompiledPlan.run_result` / ``run_batch_result_raw``.  The
+    statevector spec is normalized away here, so a default-mode request
+    compiles byte-identical plans to a spec-less one.
 
     ``verify=True`` runs the structural plan-IR verifier
     (:func:`repro.analysis.verify_plan.verify_plan`) on the result before
@@ -1280,9 +1515,24 @@ def compile_plan(template: CircuitTemplate, *, backend: str, target: Target,
                 items, max_width=diag_f if state_bits else None)
     else:
         items = [_lower_single(op, g) for op, g in zip(ops, dummy.gates)]
+    from repro.engine import results as R
+    if result is not None and result.mode == R.MODE_STATEVECTOR:
+        result = None
+    if result is not None:
+        result.validate_for(template)
+        # channels apply after the ideal circuit (post-circuit noise); the
+        # epilogue item is terminal by construction — both are verifier
+        # invariants (epilogue-terminal, channel-kraus)
+        for ch in result.channels:
+            items.append(PlanItem(
+                qubits=ch.qubits, controls=(), kind="channel", kraus=ch.kraus,
+                generic_flops=8.0 * (1 << len(ch.qubits)) * len(ch.kraus)))
+        items.append(PlanItem(qubits=(), controls=(), kind="result",
+                              result=result))
     plan = CompiledPlan(template=template, backend=backend, target=target,
                         f=f_eff, interpret=interpret, items=items,
-                        specialize=specialize, state_bits=state_bits)
+                        specialize=specialize, state_bits=state_bits,
+                        result=result)
     # static vectorization profile, computed once here (inside the timed
     # region: it is part of the compile, and compile_seconds attributes it)
     plan.profile = vectorization_profile(plan, dummy.gates, target)
@@ -1368,7 +1618,8 @@ class PlanCache:
     @staticmethod
     def plan_key(template: CircuitTemplate, *, backend: str, target: Target,
                  f: int | None, fuse: bool, interpret: bool,
-                 specialize: bool = True, state_bits: int = 0) -> tuple:
+                 specialize: bool = True, state_bits: int = 0,
+                 result=None) -> tuple:
         """Cache key: structure hash + everything that changes the lowering.
 
         ``state_bits`` makes the key mesh-shape-aware: a sharded plan's item
@@ -1385,13 +1636,18 @@ class PlanCache:
                           state_bits=state_bits)
         return (template.structure_key(), backend, target.name, f_eff,
                 interpret and backend == "pallas",
-                bool(specialize and f_eff), state_bits)
+                bool(specialize and f_eff), state_bits,
+                # structural result component only (mode, shots, observables,
+                # channel constants); the per-request PRNG key and the
+                # unraveling row count deliberately never fragment the cache
+                result.plan_key() if result is not None else None)
 
     def get_or_compile(self, template: CircuitTemplate | Circuit, *,
                        backend: str, target: Target, f: int | None = None,
                        fuse: bool = True, interpret: bool = True,
                        specialize: bool = True,
                        state_bits: int = 0,
+                       result=None,
                        verify: bool = False,
                        injector=None) -> CompiledPlan:
         """``verify=True`` runs the plan-IR verifier on cache *misses* (a
@@ -1403,7 +1659,8 @@ class PlanCache:
             template = template_of(template)
         key = self.plan_key(template, backend=backend, target=target, f=f,
                             fuse=fuse, interpret=interpret,
-                            specialize=specialize, state_bits=state_bits)
+                            specialize=specialize, state_bits=state_bits,
+                            result=result)
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
@@ -1417,7 +1674,7 @@ class PlanCache:
             plan = compile_plan(template, backend=backend, target=target,
                                 f=f, fuse=fuse, interpret=interpret,
                                 specialize=specialize, state_bits=state_bits,
-                                verify=verify)
+                                result=result, verify=verify)
             plan.cache_stats = self.stats
             self.stats.bump("compiles")
             self.stats.record_compile(plan.compile_seconds)
@@ -1429,7 +1686,8 @@ class PlanCache:
 
     def class_counts(self) -> dict:
         """Aggregate fused-gate counts by lowering class over cached plans."""
-        counts = {"diagonal": 0, "permutation": 0, "general": 0}
+        counts = {"diagonal": 0, "permutation": 0, "general": 0,
+                  "channel": 0, "result": 0}
         with self._lock:
             plans = list(self._plans.values())
         for plan in plans:

@@ -65,6 +65,7 @@ from repro.core import statevec as SV
 from repro.core.circuits import Circuit
 from repro.engine.batch import BatchExecutor
 from repro.engine.resilience import DeadlineExceeded, SITE_FINALIZE
+from repro.engine.results import MODE_STATEVECTOR, ResultSpec
 from repro.engine.telemetry import (Histogram, NULL_TRACER, STAGE_DEVICE_READY,
                                     STAGE_DISPATCH, STAGE_DONE, STAGE_FAILED,
                                     STAGE_RETRYING, STAGE_SHED, STAGE_SUBMIT)
@@ -129,12 +130,15 @@ class Request:
     params: np.ndarray               # [P]
     submitted: float
     state: str = RequestState.QUEUED
-    result: SV.State | None = None
+    # statevector mode resolves to a State; shots to int32[k] basis-state
+    # samples; expectation/noisy to f32[num_observables] — never the state
+    result: "SV.State | np.ndarray | None" = None
     latency: float | None = None     # seconds, submit -> result ready
     error: Exception | None = None
     history: list = dataclasses.field(default_factory=list)
     retries: int = 0                 # completed retry re-enqueues so far
     deadline: float | None = None    # absolute (scheduler-clock) deadline
+    result_spec: ResultSpec | None = None   # None = statevector mode
     _batch: "InFlightBatch | None" = dataclasses.field(
         default=None, repr=False, compare=False)
     _key: tuple | None = dataclasses.field(
@@ -243,6 +247,9 @@ class SchedulerStats:
     failed: int = 0         #: guarded-by: _lock
     retried: int = 0        #: guarded-by: _lock
     shed: int = 0           #: guarded-by: _lock
+    # per-result-mode request counts (statevector/shots/expectation/noisy)
+    #: guarded-by: _lock
+    modes: dict = dataclasses.field(default_factory=dict)
     # (not guarded-by _lock: the Histogram carries its own internal lock)
     latencies: Histogram = dataclasses.field(
         default_factory=lambda: Histogram(LATENCY_WINDOW, name="latency"))
@@ -250,9 +257,10 @@ class SchedulerStats:
     def __post_init__(self):
         self._lock = threading.Lock()
 
-    def add_request(self) -> None:
+    def add_request(self, mode: str = MODE_STATEVECTOR) -> None:
         with self._lock:
             self.requests += 1
+            self.modes[mode] = self.modes.get(mode, 0) + 1
 
     def add_batch(self, padded_slots: int) -> None:
         with self._lock:
@@ -285,6 +293,10 @@ class SchedulerStats:
                 "retried": self.retried,
                 "shed": self.shed,
             }
+            # one counter per served result mode, only for modes actually
+            # seen — an idle mode never fabricates a zero row
+            out.update({f"mode_{m}": c
+                        for m, c in sorted(self.modes.items())})
         # no latency keys at all for an idle scheduler — a fabricated 0.0 ms
         # percentile is indistinguishable from a genuinely fast one
         lat = self.latencies.summary()
@@ -313,9 +325,11 @@ class InFlightBatch:
     def __init__(self, plan, requests: list[Request], raw,
                  stats: SchedulerStats,
                  clock: Callable[[], float] = time.perf_counter,
-                 tracer=NULL_TRACER, scheduler=None, injector=None):
+                 tracer=NULL_TRACER, scheduler=None, injector=None,
+                 rows: list[int] | None = None):
         self.plan = plan
         self.requests = requests
+        self.rows = rows                 # per-request row counts (result mode)
         self.raw = raw                   # unwaited device array [padded, ...]
         self.stats = stats
         self.clock = clock
@@ -366,9 +380,18 @@ class InFlightBatch:
                           tracer=self.tracer)
                 return
             now = self.clock()
-            states = self.plan.wrap_batch(self.raw, count=len(self.requests))
-            for req, state in zip(self.requests, states):
-                req.result = state
+            if self.plan.result is not None:
+                # non-statevector payloads: collapse row expansion (noisy
+                # trajectories average) back to one payload per request
+                results = _reduce_result_rows(
+                    np.asarray(self.raw),
+                    self.rows if self.rows is not None
+                    else [1] * len(self.requests))
+            else:
+                results = self.plan.wrap_batch(self.raw,
+                                               count=len(self.requests))
+            for req, res in zip(self.requests, results):
+                req.result = res
                 req.latency = now - req.submitted
                 req._transition(RequestState.DONE)
                 self.stats.add_latency(req.latency)
@@ -384,6 +407,25 @@ class InFlightBatch:
                 for req in self.requests:
                     self.tracer.record(req.req_id, STAGE_DEVICE_READY, now)
                     self.tracer.record(req.req_id, STAGE_DONE, end)
+
+
+def _reduce_result_rows(arr: np.ndarray, rows: list[int]) -> list[np.ndarray]:
+    """Collapse a row-expanded payload stack to one payload per request.
+
+    ``arr`` is the stacked ``run_batch_result_raw`` output (padding rows
+    past ``sum(rows)`` are discarded); a request occupying ``k > 1`` rows
+    is a noisy unraveling whose trajectory expectations average (float64
+    accumulation, so wide unravelings don't lose precision in fp32).
+    """
+    out: list[np.ndarray] = []
+    off = 0
+    for k in rows:
+        seg = arr[off:off + k]
+        off += k
+        out.append(seg[0] if k == 1
+                   else seg.mean(axis=0, dtype=np.float64)
+                   .astype(np.float32))
+    return out
 
 
 def _fail(requests: list[Request], error: Exception,
@@ -503,7 +545,8 @@ class BatchScheduler:
     def submit(self, template: CircuitTemplate | Circuit,
                params: Sequence[float] | None = None, *,
                deadline_ms: float | None = None,
-               deadline_at: float | None = None) -> Request:
+               deadline_at: float | None = None,
+               result: ResultSpec | None = None) -> Request:
         """Enqueue one request; returns a future-like handle immediately.
 
         ``deadline_ms`` arms a deadline that many milliseconds after the
@@ -511,13 +554,27 @@ class BatchScheduler:
         deadline instead, for callers that started the clock earlier (the
         ingest front end stamps at producer-side enqueue).  A request past
         its deadline at dispatch time is SHED, never dispatched.
+
+        ``result`` selects the request's result mode
+        (:class:`~repro.engine.results.ResultSpec`): shots, expectation
+        sweep, or noisy unraveling.  The default (or an explicit
+        statevector spec) keeps the engine's historical behavior —
+        ``Request.result`` is the full :class:`~repro.core.statevec.State`.
         """
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0, got {deadline_ms}")
+        if result is not None:
+            if not isinstance(result, ResultSpec):
+                raise TypeError(f"result must be a ResultSpec, "
+                                f"got {type(result).__name__}")
+            if result.mode == MODE_STATEVECTOR:
+                result = None        # byte-identical plans to a spec-less run
         template, p = validate_params(template, params)
+        if result is not None:
+            result.validate_for(template)
         with self._lock:
             req = Request(req_id=next(self._ids), template=template, params=p,
-                          submitted=self._clock())
+                          submitted=self._clock(), result_spec=result)
             if deadline_at is not None:
                 req.deadline = float(deadline_at)
             elif deadline_ms is not None:
@@ -528,20 +585,24 @@ class BatchScheduler:
             # the submit stamp doubles as the span start: no extra clock read
             self.tracer.record(req.req_id, STAGE_SUBMIT, req.submitted,
                                template=template.name)
-        self.stats.add_request()
+        self.stats.add_request(result.mode if result is not None
+                               else MODE_STATEVECTOR)
         if self.max_wait_ms is not None:
             self._dispatch_groups(self._take_triggered())
         return req
 
     def submit_sweep(self, template: CircuitTemplate,
                      params_matrix, *,
-                     deadline_ms: float | None = None) -> list[Request]:
+                     deadline_ms: float | None = None,
+                     result: ResultSpec | None = None) -> list[Request]:
         """Submit one request per row of a ``[B, P]`` parameter matrix.
 
         A 1-D array is B separate bindings when the template takes one
-        parameter, and a single P-parameter binding otherwise.
+        parameter, and a single P-parameter binding otherwise.  ``result``
+        applies the same result mode to every row.
         """
-        return [self.submit(template, row, deadline_ms=deadline_ms)
+        return [self.submit(template, row, deadline_ms=deadline_ms,
+                            result=result)
                 for row in validate_sweep(template, params_matrix)]
 
     def wait_for_work(self, timeout: float | None = None) -> bool:
@@ -564,7 +625,8 @@ class BatchScheduler:
         """Grouping key = the executor's plan-cache key (mesh-shape-aware:
         the same structure headed for a different mesh never co-batches)."""
         if req._key is None:
-            req._key = self.executor.plan_key(req.template)
+            req._key = self.executor.plan_key(req.template,
+                                              result=req.result_spec)
         return req._key
 
     def _take_groups(self) -> list[list[Request]]:
@@ -711,13 +773,35 @@ class BatchScheduler:
                 if not chunk:
                     return None
         template = chunk[0].template
-        pm = np.stack([r.params for r in chunk])
-        b = len(chunk)
-        padded = _pad_size(b, self.max_batch) if self.pad_to_pow2 else b
+        spec = chunk[0].result_spec     # chunk groups by plan key, so the
+                                        # structural spec is chunk-uniform
+        if spec is None:
+            pm = np.stack([r.params for r in chunk])
+            rowkeys = rows = None
+        else:
+            # row expansion: a noisy request occupies ``unravelings`` rows
+            # of the vmapped batch axis, each stamped with (request key,
+            # trajectory index) — randomness never depends on batch position
+            rows = [r.result_spec.rows for r in chunk]
+            pm = np.concatenate([np.repeat(r.params[None, :], k, axis=0)
+                                 for r, k in zip(chunk, rows)])
+            rowkeys = np.concatenate([
+                np.stack([np.full(k, r.result_spec.key, np.uint32),
+                          np.arange(k, dtype=np.uint32)], axis=1)
+                for r, k in zip(chunk, rows)])
+        b = pm.shape[0]
+        # unraveling expansion may exceed max_batch; never pad below b
+        padded = (_pad_size(b, max(self.max_batch, b)) if self.pad_to_pow2
+                  else b)
         if padded > b:
             pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
+            if rowkeys is not None:
+                rowkeys = np.concatenate(
+                    [rowkeys, np.repeat(rowkeys[-1:], padded - b, axis=0)])
         try:
-            plan, raw = self.executor.dispatch_batch(template, pm)
+            plan, raw = self.executor.dispatch_batch(template, pm,
+                                                     result=spec,
+                                                     rowkeys=rowkeys)
         except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
             self._resolve_batch_failure(chunk, e)
             return None
@@ -731,7 +815,7 @@ class BatchScheduler:
         injector = getattr(self.executor, "injector", None)
         batch = InFlightBatch(plan, chunk, raw, self.stats, clock=self._clock,
                               tracer=self.tracer, scheduler=self,
-                              injector=injector)
+                              injector=injector, rows=rows)
         if injector is not None:
             batch.straggler = injector.draw_straggler()
         overflow: list[InFlightBatch] = []

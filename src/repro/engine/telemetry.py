@@ -573,6 +573,8 @@ def vectorization_profile(plan, gates: Sequence,
     fl = plan.flops_per_amp()
     total = fast = 0.0
     for item in plan.items:
+        if item.kind == "result":
+            continue   # reduction epilogue, not gate amplitude traffic
         amps = float(1 << n) / (1 << len(item.controls))
         total += amps
         if item.kind in ("diag", "perm"):

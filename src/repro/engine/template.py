@@ -138,6 +138,18 @@ class CircuitTemplate:
         return Circuit(self.n, [op.gate(params) for op in self.ops],
                        name=self.name)
 
+    def validate_qubits(self, qubits, what: str = "qubit") -> None:
+        """Bounds-check a qubit collection against this template's width.
+
+        Shared by request-side validation (result-spec observables and
+        noise-channel spans) so out-of-range indices fail in the
+        submitting thread, not inside a traced program.
+        """
+        for q in qubits:
+            if not 0 <= int(q) < self.n:
+                raise ValueError(f"{self.name}: {what} {q} out of range "
+                                 f"for n={self.n}")
+
     def structure_key(self) -> str:
         """Hash of everything except the parameter values."""
         cached = self.__dict__.get("_structure_key")

@@ -34,8 +34,9 @@ from repro.core import circuits as C
 from repro.core.target import get_target
 from repro.engine import (BatchExecutor, BatchScheduler, FaultInjector,
                           IngestRejected, IngestServer, PlanBreaker,
-                          RetryPolicy, SpanTracer, engine_registry,
-                          hea_template, qaoa_template, template_of)
+                          ResultSpec, RetryPolicy, SpanTracer, depolarizing,
+                          engine_registry, hea_template, qaoa_template,
+                          template_of)
 from repro.testing import run_producers
 
 
@@ -57,12 +58,28 @@ def _make_traffic(workload: str, n: int, requests: int, seed: int):
     return out
 
 
+def _make_result_spec(args, n: int) -> ResultSpec | None:
+    """Resolve --result-mode (+ its knobs) into the per-request spec."""
+    mode = args.result_mode
+    if mode == "statevector":
+        return None
+    if mode == "shots":
+        return ResultSpec.sample(args.shots, key=args.seed)
+    observables = [{0: "Z"}, {n - 1: "Z"}]
+    if mode == "expectation":
+        return ResultSpec.expectation(observables)
+    channels = [depolarizing(q, args.noise_p) for q in (0, n - 1)]
+    return ResultSpec.noisy(channels, observables,
+                            unravelings=args.unravelings, key=args.seed)
+
+
 def _serve(sched: BatchScheduler, traffic, mode: str,
-           deadline_ms: float | None = None) -> float:
+           deadline_ms: float | None = None, result=None) -> float:
     """Push traffic through one scheduler; returns wall seconds."""
     t0 = time.perf_counter()
     for template, params in traffic:
-        sched.submit(template, params, deadline_ms=deadline_ms)
+        sched.submit(template, params, deadline_ms=deadline_ms,
+                     result=result)
     if mode == "async":
         sched.drain_async()
         sched.sync()
@@ -73,7 +90,7 @@ def _serve(sched: BatchScheduler, traffic, mode: str,
 
 def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
                   max_pending: int, policy: str,
-                  deadline_ms: float | None = None,
+                  deadline_ms: float | None = None, result=None,
                   ) -> tuple[float, dict, IngestServer]:
     """K concurrent client threads through the ingest front end; returns
     wall seconds, the server report (scheduler + ingest_* fields), and the
@@ -87,7 +104,8 @@ def _serve_ingest(sched: BatchScheduler, traffic, clients: int,
         starts.append(time.perf_counter())    # right after the barrier
         for template, params in chunks[i]:
             try:
-                srv.submit(template, params, deadline_ms=deadline_ms)
+                srv.submit(template, params, deadline_ms=deadline_ms,
+                           result=result)
             except IngestRejected:
                 pass    # shed load, keep serving; the server counts these
                         # (ingest_rejected in the report)
@@ -116,6 +134,11 @@ def _print_report(rep: dict, dt: float, label: str, args,
               f"padded slots={rep['padded_slots']}")
     else:
         print(f"[{label}] no completed requests -> no latency stats")
+    modes = {k[len("mode_"):]: v for k, v in rep.items()
+             if k.startswith("mode_")}
+    if modes:
+        print(f"[{label}] result modes: "
+              + " ".join(f"{m}={c}" for m, c in sorted(modes.items())))
     print(f"[{label}] plan cache: {rep['cache_compiles']} compiles, "
           f"{rep['cache_hits']} hits, {rep['cache_misses']} misses")
     if "compile_seconds_total" in rep:
@@ -208,6 +231,20 @@ def main(argv=None):
     ap.add_argument("--metrics-json", default=None, metavar="FILE",
                     help="export the unified metrics-registry snapshot "
                          "(scheduler/cache/compile/served/ingest) as JSON")
+    ap.add_argument("--result-mode", default="statevector",
+                    choices=["statevector", "shots", "expectation", "noisy"],
+                    help="what every request asks the engine to return: the "
+                         "full state, measurement shots, Pauli expectation "
+                         "values, or noisy (trajectory-unraveled) "
+                         "expectations (docs/ARCHITECTURE.md layer 10)")
+    ap.add_argument("--shots", type=int, default=256,
+                    help="--result-mode shots: samples per request")
+    ap.add_argument("--unravelings", type=int, default=8,
+                    help="--result-mode noisy: stochastic trajectories "
+                         "averaged per request (each occupies a batch row)")
+    ap.add_argument("--noise-p", type=float, default=0.05,
+                    help="--result-mode noisy: depolarizing probability of "
+                         "the per-edge-qubit channels")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--chaos", type=float, default=None, metavar="RATE",
                     help="fault-injection chaos mode: inject dispatch "
@@ -268,14 +305,17 @@ def main(argv=None):
                            retry=retry)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
+    result = _make_result_spec(args, args.qubits)
 
     srv = None
     if args.mode == "ingest":
         dt, rep, srv = _serve_ingest(sched, traffic, max(1, args.clients),
                                      args.max_pending, args.policy,
-                                     deadline_ms=args.deadline_ms)
+                                     deadline_ms=args.deadline_ms,
+                                     result=result)
     else:
-        dt = _serve(sched, traffic, args.mode, deadline_ms=args.deadline_ms)
+        dt = _serve(sched, traffic, args.mode, deadline_ms=args.deadline_ms,
+                    result=result)
         rep = sched.report()
     _print_report(rep, dt, args.mode, args, cache=executor.cache,
                   activity=executor.activity)
@@ -314,7 +354,7 @@ def main(argv=None):
                           cache=executor.cache),   # warm plans: isolate overlap
             max_batch=args.max_batch)
         before = executor.cache.stats.as_dict()   # shared cache: report deltas
-        sync_dt = _serve(sync_sched, traffic, "sync")
+        sync_dt = _serve(sync_sched, traffic, "sync", result=result)
         sync_rep = sync_sched.report()
         for k, v in before.items():
             sync_rep[f"cache_{k}"] -= v

@@ -216,6 +216,119 @@ def test_flops_desync_caught(perm_plan):
     _expect(plan, "flops")
 
 
+# -- verifier: result-mode plans (channel items + terminal epilogue) ----------
+
+def _noisy_spec(n=5):
+    from repro.engine import results as R
+    return R.ResultSpec.noisy([R.depolarizing(0, 0.1)], [{0: "Z"}],
+                              unravelings=2, key=3)
+
+
+def _noisy_plan_fresh(n=5):
+    """A fresh (never-cached, never-shared) noisy-mode plan — tests that
+    tamper with the spec object in place must not touch a fixture."""
+    return compile_plan(qaoa_template(n, 1), backend="planar",
+                        target=CPU_TEST, result=_noisy_spec(n))
+
+
+@pytest.fixture(scope="module")
+def noisy_plan():
+    return _noisy_plan_fresh()
+
+
+def test_clean_result_plans_verify(noisy_plan):
+    from repro.engine import results as R
+    assert verify_plan(noisy_plan, semantic=True) is noisy_plan
+    for spec in (R.ResultSpec.sample(16, key=1),
+                 R.ResultSpec.expectation([{0: "Z"}, {1: "X"}])):
+        plan = compile_plan(qaoa_template(4, 1), backend="planar",
+                            target=CPU_TEST, result=spec)
+        verify_plan(plan, semantic=True)
+
+
+def test_kraus_non_trace_preserving_caught(noisy_plan):
+    i = _index_of(noisy_plan, "channel")
+    doubled = tuple(np.asarray(k) * 2.0 for k in noisy_plan.items[i].kraus)
+    _expect(_with_item(noisy_plan, i, kraus=doubled), "channel-kraus", i)
+
+
+def test_kraus_wrong_shape_caught(noisy_plan):
+    i = _index_of(noisy_plan, "channel")
+    bad = (np.eye(4, dtype=np.complex64),)   # 2-qubit op on a 1-qubit span
+    _expect(_with_item(noisy_plan, i, kraus=bad), "channel-kraus", i)
+
+
+def test_kraus_missing_caught(noisy_plan):
+    i = _index_of(noisy_plan, "channel")
+    _expect(_with_item(noisy_plan, i, kraus=()), "channel-kraus", i)
+
+
+def test_kraus_on_gate_item_caught(noisy_plan):
+    i = _index_of(noisy_plan, "dense")
+    stray = (np.eye(2, dtype=np.complex64),)
+    _expect(_with_item(noisy_plan, i, kraus=stray), "channel-kraus", i)
+
+
+def test_result_item_not_terminal_caught(noisy_plan):
+    import collections
+    items = list(noisy_plan.items)
+    items.insert(0, items.pop())             # epilogue hoisted to the front
+    _expect(dataclasses.replace(noisy_plan, items=items, _single=None,
+                                _batched=collections.OrderedDict()),
+            "epilogue-terminal")
+
+
+def test_duplicate_result_item_caught(noisy_plan):
+    import collections
+    items = list(noisy_plan.items) + [noisy_plan.items[-1]]
+    _expect(dataclasses.replace(noisy_plan, items=items, _single=None,
+                                _batched=collections.OrderedDict()),
+            "epilogue-terminal")
+
+
+def test_result_items_without_spec_caught(noisy_plan):
+    import collections
+    _expect(dataclasses.replace(noisy_plan, result=None, _single=None,
+                                _batched=collections.OrderedDict()),
+            "epilogue-terminal")
+
+
+def test_channel_interleaving_gates_caught(noisy_plan):
+    import collections
+    items = list(noisy_plan.items)
+    i = _index_of(noisy_plan, "channel")
+    items.insert(0, items.pop(i))            # channel hoisted before gates
+    _expect(dataclasses.replace(noisy_plan, items=items, _single=None,
+                                _batched=collections.OrderedDict()),
+            "epilogue-terminal")
+
+
+def test_channel_count_vs_spec_caught(noisy_plan):
+    import collections
+    items = [it for it in noisy_plan.items if it.kind != "channel"]
+    _expect(dataclasses.replace(noisy_plan, items=items, _single=None,
+                                _batched=collections.OrderedDict()),
+            "result-key")
+
+
+def test_tampered_spec_key_caught():
+    plan = _noisy_plan_fresh()
+    object.__setattr__(plan.result, "key", 1 << 40)  # dodge __post_init__
+    _expect(plan, "result-key")
+
+
+def test_tampered_spec_mode_caught():
+    plan = _noisy_plan_fresh()
+    object.__setattr__(plan.result, "mode", "teleport")
+    _expect(plan, "result-key")
+
+
+def test_tampered_observable_qubit_caught():
+    plan = _noisy_plan_fresh()
+    object.__setattr__(plan.result, "observables", (((99, "Z"),),))
+    _expect(plan, "result-key")
+
+
 # -- verify= threading ---------------------------------------------------------
 
 def test_compile_plan_verify_flag():

@@ -72,10 +72,105 @@ def test_pauli_expectation_bounded(n, seed):
     assert -1.0 - 1e-5 <= val <= 1.0 + 1e-5
 
 
+def test_sample_probs_clamps_top_of_cdf_edge():
+    """u -> 1.0 with float32 CDF round-off must clamp to 2**n - 1, never
+    index out of range (searchsorted returns N for u above the last edge)."""
+    # all mass on the last basis state: any u lands at/above the top edge
+    probs = jnp.zeros(16).at[15].set(1.0)
+    idx = np.asarray(ME.sample_probs(probs, 500, jax.random.PRNGKey(7)))
+    assert idx.min() == idx.max() == 15
+    # adversarial CDF: float32 cumsum overshoot (sums past 1.0) must still
+    # produce in-range indices
+    probs = jnp.full(64, 1.0 / 64) * 1.001
+    idx = np.asarray(ME.sample_probs(probs, 2000, jax.random.PRNGKey(8)))
+    assert idx.min() >= 0 and idx.max() <= 63
+
+
+def test_sample_probs_renormalizes_unnormalized_cdf():
+    """An unnormalized probability vector (e.g. a slightly lossy state)
+    samples from the renormalized distribution instead of piling mass on
+    the final index."""
+    probs = jnp.zeros(8).at[2].set(0.25)      # total mass 0.5, all on |2>
+    probs = probs.at[5].set(0.25)
+    idx = np.asarray(ME.sample_probs(probs, 4000, jax.random.PRNGKey(9)))
+    assert set(np.unique(idx)) == {2, 5}
+    frac = np.mean(idx == 2)
+    assert 0.45 < frac < 0.55                 # renormalized to 50/50
+
+
+def test_sample_fixed_seed_regression():
+    """Same state + same key -> identical samples, run to run (the shots
+    result mode builds its bitwise-reproducibility contract on this)."""
+    st_ = random_state(6, CPU_TEST, seed=3)
+    a = np.asarray(ME.sample(st_, 256, jax.random.PRNGKey(1234)))
+    b = np.asarray(ME.sample(st_, 256, jax.random.PRNGKey(1234)))
+    c = np.asarray(ME.sample(st_, 256, jax.random.PRNGKey(1235)))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.dtype == np.int32 and a.min() >= 0 and a.max() < 64
+
+
+def test_sample_chi_square_against_exact_distribution():
+    """Pearson chi-square goodness-of-fit of the sampler against the exact
+    probabilities: statistic bounded by the 99.9% critical value for
+    df = 2**n - 1 (fixed seed, so this never flakes)."""
+    st_ = random_state(3, CPU_TEST, seed=21)
+    probs = np.asarray(ME.probabilities(st_), np.float64)
+    probs = probs / probs.sum()
+    n_samples = 20000
+    s = np.asarray(ME.sample(st_, n_samples, jax.random.PRNGKey(77)))
+    observed = np.bincount(s, minlength=8)
+    expected = probs * n_samples
+    mask = expected > 0
+    chi2 = float(np.sum((observed[mask] - expected[mask]) ** 2
+                        / expected[mask]))
+    assert np.sum(observed[~mask]) == 0       # no mass where p == 0
+    # chi2 inverse CDF at 0.999 for df=7 is 24.32
+    assert chi2 < 24.32, f"chi-square {chi2:.2f} vs 24.32 (df=7, p=0.999)"
+
+
+def _marginal_oracle(probs: np.ndarray, n: int, qubits) -> np.ndarray:
+    """Dense einsum oracle: qubit q occupies axis n-1-q of the reshaped
+    (2,)*n tensor; keep the requested axes in request order, sum the rest."""
+    t = probs.reshape((2,) * n)
+    keep = [n - 1 - q for q in qubits]
+    m = np.einsum(t, list(range(n)), keep)    # sums out every axis not kept
+    return m.reshape(-1)
+
+
 def test_marginal_probs():
     st_ = Simulator(CPU_TEST, backend="planar").run(C.ghz(6))
     m = np.asarray(ME.marginal_probs(st_, [0]))
     np.testing.assert_allclose(m, [0.5, 0.5], atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_marginal_probs_matches_dense_oracle(data):
+    """Property (satellite of the result-mode suite): ``marginal_probs``
+    agrees with the dense einsum oracle for any qubit subset in any order —
+    including permuted orders, where the output axis order must follow the
+    request, not the qubit index."""
+    n = data.draw(st.integers(3, 7), label="n")
+    seed = data.draw(st.integers(0, 10 ** 6), label="seed")
+    k = data.draw(st.integers(1, n), label="k")
+    qubits = data.draw(st.permutations(range(n)), label="qubits")[:k]
+    st_ = random_state(n, CPU_TEST, seed=seed)
+    # marginal_probs returns a (2,)*k tensor; compare in raveled basis order
+    got = np.asarray(ME.marginal_probs(st_, qubits)).reshape(-1)
+    want = _marginal_oracle(np.asarray(ME.probabilities(st_), np.float64),
+                            n, qubits)
+    assert got.shape == (1 << k,)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    np.testing.assert_allclose(got.sum(), 1.0, atol=1e-4)
+
+
+def test_marginal_probs_order_sensitivity():
+    """[q0, q1] vs [q1, q0] must transpose the marginal, not equal it."""
+    st_ = random_state(5, CPU_TEST, seed=8)
+    ab = np.asarray(ME.marginal_probs(st_, [1, 3])).reshape(-1)
+    ba = np.asarray(ME.marginal_probs(st_, [3, 1])).reshape(-1)
+    np.testing.assert_allclose(ab.reshape(2, 2).T.reshape(-1), ba, atol=1e-6)
 
 
 def test_bitstring_counts():
