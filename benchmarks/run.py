@@ -14,8 +14,8 @@ import traceback
 from benchmarks import (batch_throughput, chaos_serve, concurrent_ingest,
                         fig6_overall, fig10_fusion, fig11_ai, fig12_ablation,
                         fig13_scaling, fig14_projection, gate_classes,
-                        result_modes, roofline, serve_mixed, sharded_batch,
-                        tab3_gate_ops, tab4_vectorization,
+                        result_modes, roofline, serve_mixed, shape_routing,
+                        sharded_batch, tab3_gate_ops, tab4_vectorization,
                         telemetry_overhead)
 
 MODULES = {
@@ -34,6 +34,7 @@ MODULES = {
     "chaos": chaos_serve,
     "classes": gate_classes,
     "results": result_modes,
+    "routing": shape_routing,
     "sharded": sharded_batch,
     "telemetry": telemetry_overhead,
 }

@@ -81,6 +81,14 @@ INVARIANTS = {
                   "PRNG key for modes that draw randomness, and per-mode "
                   "payload (shots > 0 / observables present / channel items "
                   "matching spec.channels)",
+    "class-canonical": "a class-routable plan re-canonicalizes to its "
+                       "cached shape-class key, and every member of a "
+                       "class batch re-canonicalizes to the executable's "
+                       "key (no mis-routed row ever executes another "
+                       "structure's item skeleton)",
+    "class-tensors": "a plan's stacked per-row constant tensors match the "
+                     "slot layout derived independently from its class key "
+                     "(dtype and shape per slot, double-entry)",
 }
 
 
@@ -402,6 +410,53 @@ def _check_semantic(plan: CompiledPlan) -> None:
               f"on seed-{_SEMANTIC_SEED} binding")
 
 
+def verify_shape_class(plan: CompiledPlan) -> None:
+    """Shape-class invariants for one plan (no-op when not class-routable).
+
+    ``class-canonical``: canonicalizing the plan afresh must reproduce any
+    cached key (a stale ``_shape_class_key`` would route new traffic into
+    an executable built for a different skeleton).  ``class-tensors``: the
+    plan's row tensors must match, slot for slot, the dtype/shape layout
+    derived independently from the key — the executable's slot-counter walk
+    relies on that agreement to wire constants to the right items.
+    """
+    from repro.engine import shapeclass as SC
+    cached = getattr(plan, "_shape_class_key", None)
+    key = SC._compute_class_key(plan)
+    if cached is not None and cached != key:
+        _fail("class-canonical",
+              f"cached class key does not re-canonicalize: "
+              f"{cached[0]} vs {key[0] if key else None}")
+    if key is None:
+        return
+    tensors = SC.class_row_tensors(plan)
+    layout = SC.class_slot_shapes(key)
+    if len(tensors) != len(layout):
+        _fail("class-tensors",
+              f"{len(tensors)} row tensors vs {len(layout)} slots derived "
+              "from the class key")
+    for s, (t, (dtype, shape)) in enumerate(zip(tensors, layout)):
+        if t.dtype != np.dtype(dtype) or t.shape != shape:
+            _fail("class-tensors",
+                  f"slot {s}: tensor {t.dtype}{t.shape} != expected "
+                  f"{dtype}{shape}")
+
+
+def verify_class_members(executable, plans) -> None:
+    """``class-canonical`` for one class batch: every member plan must
+    re-canonicalize to the executable's key, and its tensors must fit the
+    executable's slot layout.  Called by the executor's verify mode on
+    every class dispatch."""
+    from repro.engine import shapeclass as SC
+    for plan in plans:
+        key = SC._compute_class_key(plan)
+        if key != executable.key:
+            _fail("class-canonical",
+                  f"{plan.template.name}: member re-canonicalizes to a "
+                  "different class than the executable serving it")
+        verify_shape_class(plan)
+
+
 def verify_plan(plan: CompiledPlan, *, semantic: bool = False) -> CompiledPlan:
     """Check every lowering invariant; raise PlanVerificationError on the
     first violation, naming item index, kind, and invariant code.
@@ -426,6 +481,7 @@ def verify_plan(plan: CompiledPlan, *, semantic: bool = False) -> CompiledPlan:
         _check_channel(item, idx)
     _check_result_structure(plan)
     _check_accounting(plan)
+    verify_shape_class(plan)
     if semantic:
         _check_semantic(plan)
     return plan

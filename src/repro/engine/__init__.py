@@ -22,6 +22,10 @@ from repro.engine.results import (  # noqa: F401
     MODE_EXPECTATION, MODE_NOISY, MODE_SHOTS, MODE_STATEVECTOR, NoiseChannel,
     ResultSpec, amplitude_damping, bit_flip, depolarizing, phase_flip,
 )
+from repro.engine.shapeclass import (  # noqa: F401
+    ClassDispatch, ClassExecutable, class_row_tensors, class_slot_shapes,
+    shape_class_key,
+)
 from repro.engine.batch import BatchExecutor  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
     BatchScheduler, InFlightBatch, Request, RequestState, SchedulerStats,

@@ -141,6 +141,20 @@ class BatchExecutor:
             specialize=self.specialize, state_bits=spec.state_bits,
             result=result)
 
+    def class_key(self, template: CircuitTemplate | Circuit,
+                  result=None) -> tuple | None:
+        """The shape-class key :meth:`dispatch_class_batch` would route
+        ``template`` under, or None when class routing does not apply (a
+        mesh is configured, a non-planar backend, or a non-canonicalizable
+        plan).  Resolving the key compiles the plan — the canonical form is
+        a property of the *lowered* item sequence, not the template."""
+        if self._device_pool is not None:
+            return None
+        from repro.engine import shapeclass as SC
+        if self.backend not in SC.CLASS_BACKENDS:
+            return None
+        return SC.shape_class_key(self.plan_for(template, result=result))
+
     # -- execution ------------------------------------------------------------
     def run(self, template: CircuitTemplate | Circuit, params=None,
             initial: SV.State | None = None) -> SV.State:
@@ -221,6 +235,72 @@ class BatchExecutor:
             return plan, plan.run_batch_raw(params_matrix)
         return plan, plan.run_sharded_batch_raw(params_matrix,
                                                 self._mesh_for(spec))
+
+    def dispatch_class_batch(self, templates: Sequence, params_matrix,
+                             result=None, rowkeys=None):
+        """Class-routed sibling of :meth:`dispatch_batch`: one row per
+        template, every template in the *same shape class*, executed by the
+        class's shared vmapped program with each row's erased constants
+        stacked as batch-axis inputs.
+
+        Returns ``(dispatch, raw)`` where ``dispatch`` is a
+        :class:`~repro.engine.shapeclass.ClassDispatch` — it quacks like
+        the plan half of :meth:`dispatch_batch`'s return (``result`` +
+        ``wrap_batch``) but wraps each row with its own member plan.
+        ``templates`` may be shorter than the batch (scheduler padding):
+        filler rows re-run the last template's constants, which is safe
+        precisely because filler parameter rows and rowkeys are inert.
+        """
+        from repro.engine import shapeclass as SC
+        if self._device_pool is not None:
+            raise ValueError("class-routed dispatch is single-device; "
+                             "meshes keep exact-key grouping")
+        params_matrix = np.atleast_2d(np.asarray(params_matrix, np.float32))
+        if not templates:
+            raise ValueError("dispatch_class_batch needs >= 1 template")
+        plans = [self.plan_for(t, result=result) for t in templates]
+        entry = self.cache.class_executable(plans[0])
+        if entry is None:
+            raise ValueError(f"{plans[0].template.name}: plan is not "
+                             f"class-routable")
+        # membership is a hard correctness precondition, not a debug check:
+        # a mis-routed row would silently execute another structure's item
+        # skeleton over its own constants
+        for p in plans:
+            k = SC.shape_class_key(p)
+            if k != entry.key:
+                raise ValueError(
+                    f"{p.template.name}: plan re-canonicalizes to a "
+                    f"different shape class than this batch")
+        if self.verify:
+            from repro.analysis.verify_plan import verify_class_members
+            verify_class_members(entry, plans)
+        if self.injector is not None:
+            self.injector.fire(SITE_DISPATCH)
+        B = params_matrix.shape[0]
+        if B < len(plans):
+            raise ValueError(f"params matrix has {B} rows for "
+                             f"{len(plans)} templates")
+        # per-plan served-activity attribution; padding rows ran the last
+        # member's constants, so they are billed to it
+        tally: dict[int, tuple[CompiledPlan, int]] = {}
+        for b in range(B):
+            p = plans[min(b, len(plans) - 1)]
+            prev = tally.get(id(p))
+            tally[id(p)] = (p, (prev[1] if prev else 0) + 1)
+        for p, rows in tally.values():
+            self.activity.record(p, rows)
+        tensors = [SC.class_row_tensors(p) for p in plans]
+        if B > len(tensors):
+            tensors.extend([tensors[-1]] * (B - len(tensors)))
+        consts = tuple(np.stack([t[i] for t in tensors])
+                       for i in range(entry.num_slots))
+        if plans[0].result is not None and rowkeys is None:
+            rowkeys = np.zeros((B, 2), np.uint32)
+        raw = entry.run_class_batch_raw(params_matrix, consts,
+                                        rowkeys=rowkeys)
+        dispatch = SC.ClassDispatch(entry, plans, result=plans[0].result)
+        return dispatch, raw
 
     def finalize_batch(self, plan: CompiledPlan, raw,
                        count: int | None = None) -> list[SV.State]:

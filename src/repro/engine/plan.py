@@ -1562,6 +1562,12 @@ class CacheStats:
     #: guarded-by: _lock
     batch_evictions: int = 0     # per-plan batched-executable LRU evictions
     #: guarded-by: _lock
+    class_builds: int = 0        # shape-class executables constructed
+    #: guarded-by: _lock
+    class_evictions: int = 0     # shape-class index LRU evictions
+    #: guarded-by: _lock
+    class_batch_evictions: int = 0  # per-class batched-executable evictions
+    #: guarded-by: _lock
     compile_seconds: float = 0.0  # total wall time spent in compile_plan
 
     def __post_init__(self):
@@ -1609,9 +1615,13 @@ class PlanCache:
     more than the serialization costs.
     """
 
-    def __init__(self, max_plans: int = 256):
+    def __init__(self, max_plans: int = 256, max_classes: int = 64):
         self.max_plans = max_plans
+        self.max_classes = max_classes
         self._plans: collections.OrderedDict = collections.OrderedDict()  #: guarded-by: _lock
+        # shape-class index: class key -> ClassExecutable, alongside the
+        # exact-key plan LRU (see repro.engine.shapeclass)
+        self._classes: collections.OrderedDict = collections.OrderedDict()  #: guarded-by: _lock
         self._lock = threading.RLock()
         self.stats = CacheStats()
 
@@ -1684,6 +1694,33 @@ class PlanCache:
                 self.stats.bump("evictions")
         return plan
 
+    def class_executable(self, plan: CompiledPlan):
+        """Shape-class executable serving ``plan``'s class, or None if the
+        plan is not class-routable (non-planar backend, sharded lowering).
+
+        The index is a bounded LRU beside the exact-key plan LRU: the first
+        member plan of a class becomes the executable's structure donor
+        (constants are never read from it at execution time — they arrive
+        as per-row inputs), and later members of the same class hit the
+        cached entry regardless of which structure donated it.
+        """
+        from repro.engine import shapeclass as SC
+        key = SC.shape_class_key(plan)
+        if key is None:
+            return None
+        with self._lock:
+            entry = self._classes.get(key)
+            if entry is not None:
+                self._classes.move_to_end(key)
+                return entry
+            entry = SC.ClassExecutable(plan, key)
+            self._classes[key] = entry
+            self.stats.bump("class_builds")
+            while len(self._classes) > self.max_classes:
+                self._classes.popitem(last=False)
+                self.stats.bump("class_evictions")
+        return entry
+
     def class_counts(self) -> dict:
         """Aggregate fused-gate counts by lowering class over cached plans."""
         counts = {"diagonal": 0, "permutation": 0, "general": 0,
@@ -1716,6 +1753,7 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
+            self._classes.clear()
             self.stats = CacheStats()
 
 

@@ -256,6 +256,20 @@ class ResultSpec:
         return (self.mode, self.shots, self.observables,
                 tuple(ch.structure_key() for ch in self.channels))
 
+    def class_key_component(self) -> tuple | None:
+        """Result component of a *shape-class* key (see
+        :mod:`repro.engine.shapeclass`).
+
+        Deliberately identical to :meth:`plan_key`: channel Kraus values and
+        observable coefficients enter the epilogue as baked constants shared
+        by every class member, so the class key must pin them exactly as the
+        plan key does — only gate-item constants are erased by
+        canonicalization.  Kept as a separate method so the two keys can
+        diverge (e.g. erasing observable coefficients into row inputs)
+        without overloading the plan-cache key.
+        """
+        return self.plan_key()
+
     def validate_for(self, template) -> None:
         """Bounds-check observable/channel qubits against the template."""
         for obs in self.observables:

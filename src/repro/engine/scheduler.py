@@ -143,6 +143,10 @@ class Request:
         default=None, repr=False, compare=False)
     _key: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
+    # the key this request was actually grouped under: its shape-class key
+    # when class-routed, else its exact plan key (== _key)
+    _gkey: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if not self.history:
@@ -224,6 +228,13 @@ def _pad_size(b: int, max_batch: int) -> int:
     return min(p, max_batch)
 
 
+# (seed, trajectory) stamped on padding rows.  The trajectory half makes
+# the pair unreachable by real traffic: served rows index trajectories
+# 0..unravelings-1, never 2**32 - 1, so a filler row's PRNG stream is
+# never a replay of a request's sampling epilogue
+_FILLER_ROWKEY = 0xFFFFFFFF
+
+
 @dataclasses.dataclass
 class SchedulerStats:
     """Aggregate serving counters, safe under concurrent submitters.
@@ -243,10 +254,19 @@ class SchedulerStats:
 
     requests: int = 0       #: guarded-by: _lock
     batches: int = 0        #: guarded-by: _lock
+    batch_rows: int = 0     #: guarded-by: _lock
     padded_slots: int = 0   #: guarded-by: _lock
     failed: int = 0         #: guarded-by: _lock
     retried: int = 0        #: guarded-by: _lock
     shed: int = 0           #: guarded-by: _lock
+    # shape-class routing counters (zero / absent from summaries unless the
+    # scheduler actually class-routes)
+    class_routed: int = 0   #: guarded-by: _lock
+    class_batches: int = 0  #: guarded-by: _lock
+    overflow_spills: int = 0  #: guarded-by: _lock
+    # per-class routed request counts, keyed by the short class label
+    #: guarded-by: _lock
+    class_groups: dict = dataclasses.field(default_factory=dict)
     # per-result-mode request counts (statevector/shots/expectation/noisy)
     #: guarded-by: _lock
     modes: dict = dataclasses.field(default_factory=dict)
@@ -262,10 +282,28 @@ class SchedulerStats:
             self.requests += 1
             self.modes[mode] = self.modes.get(mode, 0) + 1
 
-    def add_batch(self, padded_slots: int) -> None:
+    def add_batch(self, rows: int, padded_slots: int,
+                  klass: bool = False) -> None:
+        """Count one dispatched batch: ``rows`` real rows, ``padded_slots``
+        filler rows, ``klass`` when it ran the shape-class program."""
         with self._lock:
             self.batches += 1
+            self.batch_rows += rows
             self.padded_slots += padded_slots
+            if klass:
+                self.class_batches += 1
+
+    def add_class_routed(self, label: str) -> None:
+        """Count one request routed into the shape-class group ``label``."""
+        with self._lock:
+            self.class_routed += 1
+            self.class_groups[label] = self.class_groups.get(label, 0) + 1
+
+    def add_spill(self) -> None:
+        """Count one capacity overflow: a request whose shape-class group
+        was already at capacity, spilled to exact-key grouping."""
+        with self._lock:
+            self.overflow_spills += 1
 
     def add_failure(self) -> None:
         with self._lock:
@@ -293,6 +331,19 @@ class SchedulerStats:
                 "retried": self.retried,
                 "shed": self.shed,
             }
+            # batch fill: real rows / device rows — the serving analogue of
+            # vector-lane occupancy.  Absent until a batch has dispatched
+            # (an idle scheduler reports no fabricated 100%)
+            device_rows = self.batch_rows + self.padded_slots
+            if device_rows:
+                out["fill_rate"] = self.batch_rows / device_rows
+            # routing counters only when class routing actually happened —
+            # a per-key-only scheduler's summary is unchanged
+            if self.class_routed or self.overflow_spills:
+                out["class_routed"] = self.class_routed
+                out["class_batches"] = self.class_batches
+                out["overflow_spills"] = self.overflow_spills
+                out["shape_classes"] = len(self.class_groups)
             # one counter per served result mode, only for modes actually
             # seen — an idle mode never fabricates a zero row
             out.update({f"mode_{m}": c
@@ -306,6 +357,27 @@ class SchedulerStats:
                 "latency_p50_ms": lat["p50"] * 1e3,
                 "latency_p99_ms": lat["p99"] * 1e3,
             })
+        return out
+
+    def routing_summary(self) -> dict:
+        """Shape-class routing counters for the telemetry registry: fill
+        rate, routed/spilled request counts, batches served by class
+        programs, and per-class routed counts.  Empty before any batch
+        dispatches so an idle source contributes no fabricated rows."""
+        with self._lock:
+            device_rows = self.batch_rows + self.padded_slots
+            if not device_rows:
+                return {}
+            out = {
+                "fill_rate": self.batch_rows / device_rows,
+                "batch_rows": self.batch_rows,
+                "class_routed": self.class_routed,
+                "class_batches": self.class_batches,
+                "overflow_spills": self.overflow_spills,
+                "shape_classes": len(self.class_groups),
+            }
+            out.update({f"class_{label}": c
+                        for label, c in sorted(self.class_groups.items())})
         return out
 
 
@@ -445,6 +517,28 @@ def _fail(requests: list[Request], error: Exception,
                           error=type(error).__name__)
 
 
+@dataclasses.dataclass
+class _Group:
+    """One open queue group: its requests, row total, and open stamp.
+
+    ``opened`` is the aging anchor — the *earliest* moment work for this
+    grouping key started waiting, not merely the head request's submit
+    stamp.  When a key re-opens while older co-batchable requests sit in
+    the retry backlog, the open stamp inherits their wait start, so the
+    aging trigger is monotone across re-opens (a key's effective age never
+    jumps backwards just because a force-flush emptied its group).
+
+    ``rows`` is the device-row total (a noisy request occupies its
+    unraveling count), the quantity both the fullness trigger and the
+    shape-class capacity check meter — request counts under-measure noisy
+    traffic.
+    """
+
+    reqs: list = dataclasses.field(default_factory=list)
+    opened: float = 0.0
+    rows: int = 0
+
+
 class BatchScheduler:
     """Groups queued requests by plan key and executes them batched.
 
@@ -472,14 +566,28 @@ class BatchScheduler:
                  max_batch: int = 64, pad_to_pow2: bool = True,
                  inflight: int = 2, max_wait_ms: float | None = None,
                  clock: Callable[[], float] | None = None,
-                 tracer=None, retry=None):
+                 tracer=None, retry=None, class_routing: bool = False,
+                 capacity_factor: float = 2.0):
         if inflight < 0:
             raise ValueError(f"inflight must be >= 0, got {inflight}")
+        if capacity_factor < 1.0:
+            raise ValueError(
+                f"capacity_factor must be >= 1.0, got {capacity_factor}")
         self.executor = executor if executor is not None else BatchExecutor()
         self.max_batch = max_batch
         self.pad_to_pow2 = pad_to_pow2
         self.inflight = inflight
         self.max_wait_ms = max_wait_ms
+        # shape-class routing (repro.engine.shapeclass): group requests by
+        # canonical item-sequence shape instead of exact plan key, so a
+        # long-tailed template mix fills batches.  ``capacity_factor`` is
+        # the MoE-style expert capacity — an *open* class group holds at
+        # most capacity_factor * max_batch rows; a request that would
+        # overflow it spills to its exact plan key (never dropped, never
+        # unboundedly padded)
+        self.class_routing = class_routing
+        self.capacity_factor = capacity_factor
+        self._class_labels: dict = {}    #: guarded-by: _lock
         # retry policy (repro.engine.resilience.RetryPolicy); None keeps the
         # pre-resilience semantics: any batch failure is terminal FAILED
         self.retry = retry
@@ -493,9 +601,10 @@ class BatchScheduler:
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)
         self._window: collections.deque[InFlightBatch] = collections.deque()  #: guarded-by: _lock, _work
-        # the queue, grouped by plan key, maintained incrementally so the
-        # streaming trigger check in submit() stays O(group count)
-        self._groups: dict[tuple, list[Request]] = {}  #: guarded-by: _lock, _work
+        # the queue, grouped by plan key (or shape-class key under class
+        # routing), maintained incrementally so the streaming trigger check
+        # in submit() stays O(group count)
+        self._groups: dict[tuple, _Group] = {}  #: guarded-by: _lock, _work
         # failed chunks awaiting backoff redispatch: (not_before, chunk).
         # Chunks are re-enqueued *intact* — never merged with new arrivals —
         # so a retried batch keeps its padded size and its results stay
@@ -511,7 +620,7 @@ class BatchScheduler:
         """Queued (not yet dispatched) requests, in submit order per group,
         plus any failed chunks awaiting their retry backoff."""
         with self._lock:
-            out = [r for reqs in self._groups.values() for r in reqs]
+            out = [r for g in self._groups.values() for r in g.reqs]
             out += [r for _, reqs in self._retries for r in reqs]
         return out
 
@@ -529,8 +638,8 @@ class BatchScheduler:
         (:func:`repro.engine.resilience.snapshot_records`)."""
         with self._lock:
             seen: dict[int, Request] = {}
-            for reqs in self._groups.values():
-                for r in reqs:
+            for g in self._groups.values():
+                for r in g.reqs:
                     seen[r.req_id] = r
             for _, reqs in self._retries:
                 for r in reqs:
@@ -572,14 +681,19 @@ class BatchScheduler:
         template, p = validate_params(template, params)
         if result is not None:
             result.validate_for(template)
+        # key resolution runs OUTSIDE the scheduler lock: the class key
+        # compiles the plan (canonical form is a property of the lowering),
+        # and producers must never block behind an XLA compile
+        exact, ckey = self._route_keys(template, result)
         with self._lock:
             req = Request(req_id=next(self._ids), template=template, params=p,
                           submitted=self._clock(), result_spec=result)
+            req._key = exact
             if deadline_at is not None:
                 req.deadline = float(deadline_at)
             elif deadline_ms is not None:
                 req.deadline = req.submitted + deadline_ms / 1e3
-            self._groups.setdefault(self._plan_key(req), []).append(req)
+            self._enqueue_locked(req, ckey)
             self._work.notify_all()
         if self.tracer.enabled:
             # the submit stamp doubles as the span start: no extra clock read
@@ -629,10 +743,75 @@ class BatchScheduler:
                                               result=req.result_spec)
         return req._key
 
+    def _route_keys(self, template: CircuitTemplate,
+                    result: ResultSpec | None) -> tuple[tuple, tuple | None]:
+        """``(exact plan key, shape-class key or None)`` for a submission.
+
+        The class key is best-effort: resolving it lowers the plan, and a
+        template whose compile fails must still enqueue normally so the
+        failure surfaces at dispatch with the batch-failure semantics
+        (retry/FAILED), not as a submit-time raise.
+        """
+        exact = self.executor.plan_key(template, result=result)
+        if not self.class_routing:
+            return exact, None
+        try:
+            return exact, self.executor.class_key(template, result=result)
+        except Exception:  # noqa: BLE001 — broken plan: exact-key fallback
+            return exact, None
+
+    def _enqueue_locked(self, req: Request, ckey: tuple | None) -> None:
+        """Append ``req`` to its queue group, choosing class vs exact key.
+
+        Caller holds ``_lock``.  A class group at capacity
+        (``capacity_factor * max_batch`` device rows, MoE expert-capacity
+        style) spills the request to its exact plan key instead —
+        streaming schedulers launch full groups from ``submit`` long
+        before capacity binds, so spills measure genuine overload.
+        """
+        rows = req.result_spec.rows if req.result_spec is not None else 1
+        gkey = req._key
+        if ckey is not None:
+            cap = max(int(self.capacity_factor * self.max_batch),
+                      self.max_batch)
+            g = self._groups.get(ckey)
+            if g is not None and g.rows + rows > cap:
+                self.stats.add_spill()
+            else:
+                gkey = ckey
+                self.stats.add_class_routed(self._class_label(ckey))
+        g = self._groups.get(gkey)
+        if g is None:
+            # aging anchor: inherit the wait start of any co-batchable
+            # request still in the retry backlog, so re-opening a key does
+            # not reset its age (see _Group)
+            opened = req.submitted
+            for _, chunk in self._retries:
+                for r in chunk:
+                    if r._gkey == gkey:
+                        opened = min(opened, r.submitted)
+            g = _Group(opened=opened)
+            self._groups[gkey] = g
+        else:
+            g.opened = min(g.opened, req.submitted)
+        g.reqs.append(req)
+        g.rows += rows
+        req._gkey = gkey
+
+    def _class_label(self, ckey: tuple) -> str:
+        """Memoized short digest of a class key (stats/report readability).
+        Caller holds ``_lock`` (the memo dict rides the scheduler lock)."""
+        label = self._class_labels.get(ckey)
+        if label is None:
+            from repro.engine.shapeclass import class_label
+            label = class_label(ckey)
+            self._class_labels[ckey] = label
+        return label
+
     def _take_groups(self) -> list[list[Request]]:
         """Dequeue all pending requests, grouped by plan key in FIFO order."""
         with self._lock:
-            groups = list(self._groups.values())
+            groups = [g.reqs for g in self._groups.values()]
             # dequeue before executing: a failing chunk must not leave its (or
             # other groups') requests queued for a silent re-run on the next
             # drain
@@ -640,17 +819,22 @@ class BatchScheduler:
         return groups
 
     def _take_triggered(self, force: bool = False) -> list[list[Request]]:
-        """Dequeue every group that is full or has aged out (all if force)."""
+        """Dequeue every group that is full or has aged out (all if force).
+
+        Fullness is metered in device *rows* (a noisy request counts its
+        unraveling expansion), and age runs from the group's ``opened``
+        stamp — monotone across re-opens — not the current head request.
+        """
         with self._lock:
             now = self._clock()
             fired = []
-            for key, reqs in list(self._groups.items()):
-                full = len(reqs) >= self.max_batch
+            for key, g in list(self._groups.items()):
+                full = g.rows >= self.max_batch
                 aged = (self.max_wait_ms is not None and
-                        (now - reqs[0].submitted) * 1e3 >= self.max_wait_ms)
+                        (now - g.opened) * 1e3 >= self.max_wait_ms)
                 if force or full or aged:
                     del self._groups[key]
-                    fired.append(reqs)
+                    fired.append(g.reqs)
         return fired
 
     def _take_retries(self, force: bool = False) -> list[list[Request]]:
@@ -744,11 +928,38 @@ class BatchScheduler:
         return out
 
     # -- dispatch -------------------------------------------------------------
+    def _row_chunks(self, reqs: list[Request]) -> list[list[Request]]:
+        """Split a group into dispatch chunks of at most ``max_batch``
+        device *rows* (and at most ``max_batch`` requests).
+
+        Row-aware chunking caps unraveling expansion at grouping time: a
+        group of noisy requests splits *before* dispatch instead of
+        producing ever-larger expanded batches whose unbounded distinct
+        padded sizes thrash the per-plan batched-program LRU.  The one
+        irreducible case — a single request whose own unraveling exceeds
+        ``max_batch`` — dispatches alone (its rows can never split across
+        batches: a batch finalizes all its trajectories together).
+        """
+        chunks: list[list[Request]] = []
+        cur: list[Request] = []
+        cur_rows = 0
+        for r in reqs:
+            k = r.result_spec.rows if r.result_spec is not None else 1
+            if cur and (cur_rows + k > self.max_batch
+                        or len(cur) >= self.max_batch):
+                chunks.append(cur)
+                cur, cur_rows = [], 0
+            cur.append(r)
+            cur_rows += k
+        if cur:
+            chunks.append(cur)
+        return chunks
+
     def _dispatch_group(self, reqs: list[Request],
                         finalize_each: bool = False) -> list[InFlightBatch]:
         launched = []
-        for lo in range(0, len(reqs), self.max_batch):
-            batch = self._dispatch_chunk(reqs[lo:lo + self.max_batch])
+        for chunk in self._row_chunks(reqs):
+            batch = self._dispatch_chunk(chunk)
             if batch is not None:
                 if finalize_each:
                     batch.finalize()
@@ -773,11 +984,18 @@ class BatchScheduler:
                 if not chunk:
                     return None
         template = chunk[0].template
-        spec = chunk[0].result_spec     # chunk groups by plan key, so the
-                                        # structural spec is chunk-uniform
+        spec = chunk[0].result_spec     # chunks group by plan or class key;
+                                        # either way the structural spec
+                                        # component is chunk-uniform
+        # a chunk whose requests resolve to different exact plan keys came
+        # from a shape-class group and must run the class program; a
+        # key-uniform chunk always takes the exact path (identical results,
+        # and the per-plan program is already the hot one)
+        klass = len({r._key for r in chunk}) > 1
         if spec is None:
             pm = np.stack([r.params for r in chunk])
             rowkeys = rows = None
+            templates = [r.template for r in chunk] if klass else None
         else:
             # row expansion: a noisy request occupies ``unravelings`` rows
             # of the vmapped batch axis, each stamped with (request key,
@@ -789,23 +1007,42 @@ class BatchScheduler:
                 np.stack([np.full(k, r.result_spec.key, np.uint32),
                           np.arange(k, dtype=np.uint32)], axis=1)
                 for r, k in zip(chunk, rows)])
+            templates = ([r.template for r, k in zip(chunk, rows)
+                          for _ in range(k)] if klass else None)
         b = pm.shape[0]
-        # unraveling expansion may exceed max_batch; never pad below b
-        padded = (_pad_size(b, max(self.max_batch, b)) if self.pad_to_pow2
-                  else b)
+        if not self.pad_to_pow2:
+            padded = b
+        elif b <= self.max_batch:
+            padded = _pad_size(b, self.max_batch)
+        else:
+            # a single request whose unraveling exceeds max_batch (row-aware
+            # chunking dispatches it alone): pad to the next power of two so
+            # oversized traffic still compiles O(log) distinct batch sizes
+            padded = 1 << (b - 1).bit_length()
         if padded > b:
-            pm = np.concatenate([pm, np.repeat(pm[-1:], padded - b, axis=0)])
+            # inert filler rows: zero params and a dead rowkey — a padded
+            # slot must never re-execute a real request's sampling epilogue
+            # (replicating the last row would re-run its full unraveling,
+            # and its payload would differ from the real row's only by
+            # being discarded — wasted flops and a misleading trace)
+            pm = np.concatenate(
+                [pm, np.zeros((padded - b, pm.shape[1]), np.float32)])
             if rowkeys is not None:
                 rowkeys = np.concatenate(
-                    [rowkeys, np.repeat(rowkeys[-1:], padded - b, axis=0)])
+                    [rowkeys, np.full((padded - b, 2), _FILLER_ROWKEY,
+                                      np.uint32)])
         try:
-            plan, raw = self.executor.dispatch_batch(template, pm,
-                                                     result=spec,
-                                                     rowkeys=rowkeys)
+            if klass:
+                plan, raw = self.executor.dispatch_class_batch(
+                    templates, pm, result=spec, rowkeys=rowkeys)
+            else:
+                plan, raw = self.executor.dispatch_batch(template, pm,
+                                                         result=spec,
+                                                         rowkeys=rowkeys)
         except Exception as e:  # noqa: BLE001 — compile/trace/launch failure
             self._resolve_batch_failure(chunk, e)
             return None
-        self.stats.add_batch(padded - b)
+        self.stats.add_batch(b, padded - b, klass=klass)
         if self.tracer.enabled:
             bid = next(self._batch_ids)
             now = self._clock()

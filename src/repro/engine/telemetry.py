@@ -262,7 +262,9 @@ def engine_registry(*, scheduler=None, executor=None,
     """The one snapshot/export API over the engine's stats objects.
 
     Wires a :class:`MetricsRegistry` with sources for whichever pieces are
-    given: ``scheduler_*`` (:class:`~repro.engine.scheduler.SchedulerStats`),
+    given: ``scheduler_*`` / ``routing_*``
+    (:class:`~repro.engine.scheduler.SchedulerStats` summary and its
+    shape-class routing counters),
     ``cache_*`` / ``compile_*`` (:class:`~repro.engine.plan.CacheStats`
     counters and compile-time percentiles), ``served_*``
     (:class:`ServedActivity`), and ``ingest_*`` (the
@@ -275,6 +277,9 @@ def engine_registry(*, scheduler=None, executor=None,
         scheduler = scheduler if scheduler is not None else server.scheduler
     if scheduler is not None:
         reg.register_source("scheduler", scheduler.stats.summary)
+        # shape-class routing source: batch fill + per-class routed counts
+        # (empty until a batch dispatches, so idle schedulers add no keys)
+        reg.register_source("routing", scheduler.stats.routing_summary)
         executor = executor if executor is not None else scheduler.executor
     if executor is not None:
         reg.register_source("cache", executor.stats.as_dict)

@@ -154,6 +154,19 @@ def _print_report(rep: dict, dt: float, label: str, args,
               f"(policy={rep['ingest_policy']}, "
               f"max_pending={rep['ingest_max_pending']})")
     if getattr(args, "stats", False):
+        if "class_routed" in rep:
+            # shape-class routing: batch fill plus how much of the traffic
+            # actually co-batched across exact plan keys (spills = requests
+            # that hit the class group's capacity and fell back to per-key)
+            print(f"[{label}] routing: fill={rep['fill_rate'] * 100:.1f}% "
+                  f"class_routed={rep['class_routed']} "
+                  f"class_batches={rep['class_batches']} "
+                  f"spills={rep['overflow_spills']} "
+                  f"classes={rep['shape_classes']}")
+        elif "fill_rate" in rep:
+            print(f"[{label}] routing: fill={rep['fill_rate'] * 100:.1f}% "
+                  f"(exact-key grouping; --class-routing to co-batch "
+                  f"shape-compatible templates)")
         print(f"[{label}] fused gates by class: "
               f"diagonal={rep.get('gates_diagonal', 0)} "
               f"permutation={rep.get('gates_permutation', 0)} "
@@ -265,9 +278,20 @@ def main(argv=None):
                     help="plan-key circuit breaker: quarantine a key to the "
                          "generic lowering after this many consecutive "
                          "batch failures")
+    ap.add_argument("--class-routing", action="store_true",
+                    help="group requests by shape class (canonical fused-"
+                         "item skeleton) instead of exact plan key, so a "
+                         "long-tailed template mix still fills batches "
+                         "(results stay bitwise-identical)")
+    ap.add_argument("--capacity-factor", type=float, default=2.0,
+                    help="MoE-style expert capacity under --class-routing: "
+                         "an open class group holds at most this many "
+                         "max-batches of rows before overflow spills to "
+                         "exact-key grouping (default 2.0)")
     ap.add_argument("--verify-plans", action="store_true",
                     help="run the plan-IR verifier on every compiled plan "
-                         "(repro.analysis; CI smoke mode)")
+                         "and every class dispatch (repro.analysis; CI "
+                         "smoke mode)")
     ap.add_argument("--compare-sync", action="store_true",
                     help="also run the same traffic through a fresh "
                          "synchronous scheduler (warm plans) and report the "
@@ -302,7 +326,9 @@ def main(argv=None):
     sched = BatchScheduler(executor, max_batch=args.max_batch,
                            inflight=args.inflight,
                            max_wait_ms=max_wait_ms, tracer=tracer,
-                           retry=retry)
+                           retry=retry,
+                           class_routing=args.class_routing,
+                           capacity_factor=args.capacity_factor)
     traffic = _make_traffic(args.workload, args.qubits, args.requests,
                             args.seed)
     result = _make_result_spec(args, args.qubits)
@@ -352,7 +378,9 @@ def main(argv=None):
                           mesh=args.mesh,
                           max_local_qubits=args.max_local_qubits,
                           cache=executor.cache),   # warm plans: isolate overlap
-            max_batch=args.max_batch)
+            max_batch=args.max_batch,
+            class_routing=args.class_routing,
+            capacity_factor=args.capacity_factor)
         before = executor.cache.stats.as_dict()   # shared cache: report deltas
         sync_dt = _serve(sync_sched, traffic, "sync", result=result)
         sync_rep = sync_sched.report()

@@ -1,0 +1,302 @@
+"""Shape-class routing: canonicalization, class-batched execution equal to
+per-key serving bitwise, MoE-style capacity spill, and the scheduler bugfixes
+that rode along (inert padding rows, row-capped chunking, monotone group
+aging)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.verify_plan import (PlanVerificationError,
+                                        verify_class_members,
+                                        verify_shape_class)
+from repro.core import gates as G
+from repro.core.target import CPU_TEST
+from repro.engine import (BatchExecutor, BatchScheduler, PlanCache,
+                          ResultSpec, depolarizing, hea_template,
+                          shape_class_key)
+from repro.engine import shapeclass as SC
+from repro.engine.plan import compile_plan
+from repro.engine.resilience import (FaultInjector, RetryPolicy,
+                                     SITE_DISPATCH)
+from repro.engine.scheduler import RequestState
+from repro.engine.telemetry import engine_registry
+from repro.engine.template import CircuitTemplate, TemplateOp, fixed_op
+from repro.testing import FakeClock
+
+
+def tilted_qaoa(n: int, tilts, name: str) -> CircuitTemplate:
+    """QAOA ring with per-edge constant tilt angles baked into the
+    structure: every tilt assignment is a distinct template (distinct exact
+    plan key) sharing one item skeleton (one shape-class key)."""
+    ops = [fixed_op(G.h(q)) for q in range(n)]
+    for i in range(n):
+        a, b = i, (i + 1) % n
+        ops += [fixed_op(G.cnot(a, b)), fixed_op(G.rz(b, tilts[i])),
+                TemplateOp("rz", (b,), param=0, scale=2.0, name="rz"),
+                fixed_op(G.cnot(a, b))]
+    ops += [TemplateOp("rx", (q,), param=1, scale=2.0, name="rx")
+            for q in range(n)]
+    return CircuitTemplate(n, tuple(ops), num_params=2, name=name)
+
+
+N = 5
+FAMILY = [tilted_qaoa(N, tuple(0.1 + 0.2 * i + 0.05 * j for j in range(N)),
+                      name=f"tilted{i}")
+          for i in range(4)]
+ODDBALL = hea_template(N, layers=1)     # different skeleton entirely
+POOL = FAMILY + [ODDBALL]
+
+# compiles are the expensive part of this suite: share one plan cache so
+# each template lowers once across every scheduler/executor built below
+_CACHE = PlanCache()
+
+
+def _executor(**kw) -> BatchExecutor:
+    kw.setdefault("cache", _CACHE)
+    return BatchExecutor(target=CPU_TEST, backend="planar", **kw)
+
+
+def _dense(state) -> np.ndarray:
+    return np.asarray(state.to_dense())
+
+
+def _params(rng, t) -> np.ndarray:
+    return rng.uniform(-np.pi, np.pi, t.num_params).astype(np.float32)
+
+
+# -- canonicalization ----------------------------------------------------------
+
+def test_family_shares_class_key_with_distinct_plan_keys():
+    ex = _executor()
+    plans = [ex.plan_for(t) for t in FAMILY]
+    keys = {SC.shape_class_key(p) for p in plans}
+    assert len(keys) == 1 and None not in keys
+    assert len({ex.plan_key(t) for t in FAMILY}) == len(FAMILY)
+    # the oddball's skeleton canonicalizes elsewhere
+    odd = SC.shape_class_key(ex.plan_for(ODDBALL))
+    assert odd not in keys
+    # row tensors agree slot-for-slot with the layout derived from the key
+    (key,) = keys
+    layout = SC.class_slot_shapes(key)
+    for p in plans:
+        tensors = SC.class_row_tensors(p)
+        assert [(t.dtype, t.shape) for t in tensors] == \
+            [(np.dtype(d), s) for d, s in layout]
+
+
+def test_class_key_none_off_the_planar_backend():
+    ex = BatchExecutor(target=CPU_TEST, backend="dense")
+    assert ex.class_key(FAMILY[0]) is None
+    plan = compile_plan(FAMILY[0], backend="dense", target=CPU_TEST)
+    assert shape_class_key(plan) is None
+    verify_shape_class(plan)            # no-op for a non-routable plan
+
+
+def test_plan_cache_class_executable_lru():
+    cache = PlanCache(max_classes=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=cache)
+    e1 = cache.class_executable(ex.plan_for(FAMILY[0]))
+    assert e1 is cache.class_executable(ex.plan_for(FAMILY[1]))  # same class
+    assert cache.stats.as_dict()["class_builds"] == 1
+    cache.class_executable(ex.plan_for(ODDBALL))   # evicts the family entry
+    assert cache.stats.as_dict()["class_evictions"] == 1
+    assert cache.class_executable(ex.plan_for(FAMILY[0])) is not e1
+    assert cache.stats.as_dict()["class_builds"] == 3
+
+
+# -- verifier ------------------------------------------------------------------
+
+def test_verifier_catches_stale_class_key_and_bad_tensors():
+    ex = _executor()
+    plan = ex.plan_for(FAMILY[0])
+    good = SC.shape_class_key(plan)
+    verify_shape_class(plan)
+    plan._shape_class_key = good[:-1] + ("tampered",)
+    with pytest.raises(PlanVerificationError) as e:
+        verify_shape_class(plan)
+    assert e.value.invariant == "class-canonical"
+    plan._shape_class_key = good
+    tensors = SC.class_row_tensors(plan)
+    plan._class_row_tensors = tensors[:-1]
+    with pytest.raises(PlanVerificationError) as e:
+        verify_shape_class(plan)
+    assert e.value.invariant == "class-tensors"
+    del plan._class_row_tensors
+
+
+def test_verify_class_members_rejects_foreign_plan():
+    ex = _executor()
+    entry = ex.cache.class_executable(ex.plan_for(FAMILY[0]))
+    verify_class_members(entry, [ex.plan_for(FAMILY[1])])
+    with pytest.raises(PlanVerificationError) as e:
+        verify_class_members(entry, [ex.plan_for(ODDBALL)])
+    assert e.value.invariant == "class-canonical"
+
+
+def test_dispatch_class_batch_rejects_foreign_member():
+    ex = _executor()
+    with pytest.raises(ValueError, match="shape class"):
+        ex.dispatch_class_batch([FAMILY[0], ODDBALL],
+                                np.zeros((2, 2), np.float32))
+
+
+# -- routed serving: bitwise equality + fill -----------------------------------
+
+@settings(max_examples=6)
+@given(seed=st.integers(0, 2**20))
+def test_class_routing_is_bitwise_equal_and_fills_better(seed):
+    """Property: on a random long-tailed template mix, class routing returns
+    bitwise-identical statevectors to per-key grouping and never fills the
+    device worse (falsifying seeds print via the hypothesis machinery)."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / (1.0 + np.arange(len(POOL))) ** 1.2      # Zipf-ish mix
+    w /= w.sum()
+    trace = [(POOL[i], _params(rng, POOL[i]))
+             for i in rng.choice(len(POOL), size=24, p=w)]
+
+    base = BatchScheduler(_executor(), max_batch=8)
+    routed = BatchScheduler(_executor(), max_batch=8,
+                            class_routing=True, capacity_factor=4.0)
+    rb = [base.submit(t, p) for t, p in trace]
+    rr = [routed.submit(t, p) for t, p in trace]
+    base.drain()
+    routed.drain()
+    for a, b in zip(rb, rr):
+        assert a.ok and b.ok
+        assert np.array_equal(_dense(a.result), _dense(b.result))
+    sb, sr = base.stats.summary(), routed.stats.summary()
+    assert sr["fill_rate"] >= sb["fill_rate"] - 1e-12
+    assert sr["batches"] <= sb["batches"]
+    if len({t.name for t, _ in trace}) > 1:
+        assert sr["class_routed"] > 0
+
+
+def test_class_routing_result_modes_bitwise():
+    """Shots and noisy payloads survive class batching bitwise: randomness
+    rides the (key, trajectory) rowkeys, never the batch position."""
+    rng = np.random.default_rng(7)
+    shots = ResultSpec.sample(64, key=7)
+    noisy = ResultSpec.noisy(observables=(((0, "Z"),), ((1, "X"),)),
+                             channels=(depolarizing(0, 0.05),),
+                             unravelings=3, key=11)
+    trace = [(FAMILY[i % len(FAMILY)], _params(rng, FAMILY[0]), spec)
+             for i, spec in enumerate([shots, noisy] * 6)]
+    base = BatchScheduler(_executor(), max_batch=8)
+    routed = BatchScheduler(_executor(verify=True), max_batch=8,
+                            class_routing=True)
+    rb = [base.submit(t, p, result=s) for t, p, s in trace]
+    rr = [routed.submit(t, p, result=s) for t, p, s in trace]
+    base.drain()
+    routed.drain()
+    for a, b in zip(rb, rr):
+        assert a.ok and b.ok
+        assert np.array_equal(np.asarray(a.result), np.asarray(b.result))
+    assert routed.stats.summary()["class_batches"] >= 1
+
+
+def test_capacity_factor_spills_to_exact_key():
+    """MoE-style expert capacity: an open class group holds at most
+    capacity_factor * max_batch rows; the overflow re-groups by exact plan
+    key — served, never dropped — and the spill is counted."""
+    rng = np.random.default_rng(3)
+    sched = BatchScheduler(_executor(), max_batch=4, class_routing=True,
+                           capacity_factor=1.0)
+    reqs = [sched.submit(FAMILY[i % 2], _params(rng, FAMILY[0]))
+            for i in range(12)]
+    assert sched.stats.class_routed == 4        # cap = 1.0 * max_batch rows
+    assert sched.stats.overflow_spills == 8
+    sched.drain()
+    assert all(r.ok for r in reqs)
+    s = sched.stats.summary()
+    assert s["overflow_spills"] == 8 and s["shape_classes"] == 1
+    assert s["class_batches"] == 1              # the mixed class group
+    assert s["fill_rate"] == 1.0                # 4-row groups, no padding
+
+
+def test_routing_telemetry_source():
+    rng = np.random.default_rng(5)
+    sched = BatchScheduler(_executor(), max_batch=8, class_routing=True)
+    reg = engine_registry(scheduler=sched, executor=sched.executor)
+    assert "routing_fill_rate" not in reg.snapshot()   # idle: no fabricated 0
+    for i in range(6):
+        sched.submit(FAMILY[i % 3], _params(rng, FAMILY[0]))
+    sched.drain()
+    snap = reg.snapshot()
+    assert snap["routing_class_routed"] == 6
+    assert snap["routing_shape_classes"] == 1
+    assert 0.0 < snap["routing_fill_rate"] <= 1.0
+    assert any(k.startswith("routing_class_") for k in snap)
+
+
+# -- bugfix regressions --------------------------------------------------------
+
+def test_padding_rows_are_inert_in_result_modes():
+    """Padding a result-mode batch must not replicate the last row: filler
+    rows carry zero params and a dead rowkey, payloads match an unpadded
+    run bitwise, and mode_* counters only ever count real requests."""
+    rng = np.random.default_rng(11)
+    spec = ResultSpec.sample(32, key=9)
+    pms = [_params(rng, FAMILY[0]) for _ in range(3)]
+
+    padded = BatchScheduler(_executor(), max_batch=4)       # 3 rows -> pad 4
+    unpadded = BatchScheduler(_executor(), max_batch=4, pad_to_pow2=False)
+    rp = [padded.submit(FAMILY[0], p, result=spec) for p in pms]
+    ru = [unpadded.submit(FAMILY[0], p, result=spec) for p in pms]
+    padded.drain()
+    unpadded.drain()
+    for a, b in zip(rp, ru):
+        assert a.ok and b.ok
+        assert np.array_equal(np.asarray(a.result), np.asarray(b.result))
+    s = padded.stats.summary()
+    assert s["padded_slots"] == 1
+    modes = {k: v for k, v in s.items() if k.startswith("mode_")}
+    assert modes == {"mode_shots": 3}           # filler never counted
+
+
+def test_row_chunking_keeps_batched_program_lru_cold():
+    """Noisy-mode hammer: unraveling expansion is capped at grouping time
+    (oversized groups split into <= max_batch-row chunks), so the per-plan
+    batched-program LRU sees O(log max_batch) distinct padded sizes and
+    never evicts.  Pre-fix, expansion *after* grouping produced a new
+    padded size per group size and thrashed the 8-entry LRU."""
+    rng = np.random.default_rng(13)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=PlanCache())
+    sched = BatchScheduler(ex, max_batch=16)
+    spec = ResultSpec.noisy(observables=(((0, "Z"),),),
+                            channels=(depolarizing(0, 0.05),),
+                            unravelings=3, key=3)
+    for k in range(1, 17):                      # 16 distinct group sizes
+        reqs = [sched.submit(FAMILY[0], _params(rng, FAMILY[0]), result=spec)
+                for _ in range(k)]
+        sched.drain()
+        assert all(r.ok for r in reqs)
+    assert ex.stats.as_dict()["batch_evictions"] == 0
+
+
+def test_group_aging_is_monotone_across_reopens():
+    """A key whose group was emptied (here: a dispatch fault moved its lone
+    request to the retry backlog) must not restart its aging clock when a
+    new request re-opens it — the aging anchor inherits the oldest
+    co-batchable wait start, so the streaming trigger stays monotone."""
+    clock = FakeClock()
+    inj = FaultInjector(seed=0, rates={SITE_DISPATCH: 1.0}, max_faults=1)
+    ex = BatchExecutor(target=CPU_TEST, backend="planar", cache=_CACHE,
+                       injector=inj)
+    sched = BatchScheduler(ex, max_batch=4, max_wait_ms=10.0, clock=clock,
+                           retry=RetryPolicy(max_retries=3,
+                                             backoff_base_ms=1.0))
+    a = sched.submit(FAMILY[0], [0.1, 0.2])
+    clock.advance(0.002)
+    sched.poll(force=True)                      # dispatch A: injected fault
+    assert a.state == RequestState.RETRYING
+    clock.advance(0.007)                        # t = 9 ms after A submitted
+    b = sched.submit(FAMILY[0], [0.3, 0.4])     # re-opens A's key
+    assert b.state == RequestState.QUEUED       # 9 ms < max_wait
+    clock.advance(0.0011)                       # t = 10.1 ms
+    sched.poll()
+    # pre-fix, the re-opened group aged from B's submit stamp and would not
+    # fire until t = 19 ms; the anchor inherited A's wait start instead
+    assert (clock() - a.submitted) * 1e3 < 11.0
+    assert b.state != RequestState.QUEUED
+    sched.sync()
+    assert a.ok and b.ok
